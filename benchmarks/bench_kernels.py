@@ -1,0 +1,45 @@
+"""Kernel micro-bench: us_per_call for the ONU aggregation + quantize ops
+(jnp reference path on CPU; Pallas interpret timings are not meaningful),
+plus derived wire-bytes — one row per transport variant.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    print("bench_kernels")
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+    # the paper's ONU AF over one ONU's clients (20 x 6.6M-param CNN)
+    C, N = 20, 6_603_710
+    x = jax.random.normal(key, (C, N), jnp.float32)
+    w = jax.random.uniform(key, (C,)) * 100
+    m = jnp.ones((C,))
+    us = _time(lambda a, b, c: ops.agg_reduce(a, b, c), x, w, m)
+    print(f"agg_reduce_onu20x6.6M,{us:.0f},gbps={C*N*4/us/1e3:.1f}")
+    q_us = _time(lambda a: ops.quantize_int8(a, key), x[0])
+    print(f"quantize_int8_6.6M,{q_us:.0f},wire_reduction=4x")
+    qq, ss = ops.quantize_int8(x[0], key)
+    d_us = _time(lambda a, s: ops.dequantize_int8(a, s), qq, ss)
+    print(f"dequantize_int8_6.6M,{d_us:.0f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig. 2a: required PON upstream bandwidth per round vs N (classical vs
+SFL vs SFL+int8) — classical grows linearly, SFL is constant."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pon import PonConfig, round_times
+
+
+def run(rounds: int = 20, seed: int = 0):
+    cfg = PonConfig()
+    rng = np.random.default_rng(seed)
+    onu = np.arange(cfg.n_clients) // cfg.clients_per_onu
+    counts = rng.integers(50, 400, cfg.n_clients).astype(np.float32)
+    rows = []
+    for N in (16, 32, 48, 64, 96, 128):
+        ups = {"classical": [], "sfl": []}
+        for _ in range(rounds):
+            sel = rng.choice(cfg.n_clients, N, replace=False)
+            for mode in ups:
+                ups[mode].append(
+                    round_times(cfg, rng, sel, onu, counts, mode)["upstream_mbits"])
+        c, s = np.mean(ups["classical"]), np.mean(ups["sfl"])
+        rows.append({
+            "N": N,
+            "classical_mbits": c,
+            "sfl_mbits": s,
+            "sfl_int8_mbits": s / 4.0,   # beyond-paper: int8 vs f32 payload
+            "saving_pct": 100.0 * (1 - s / c),
+        })
+    return rows
+
+
+def main():
+    print("bench_upstream (Fig 2a)")
+    print("N,classical_mbits,sfl_mbits,sfl_int8_mbits,saving_pct")
+    for r in run():
+        print(f"{r['N']},{r['classical_mbits']:.0f},{r['sfl_mbits']:.0f},"
+              f"{r['sfl_int8_mbits']:.0f},{r['saving_pct']:.1f}")
+    r48 = [r for r in run() if r["N"] == 48][0]
+    r128 = [r for r in run() if r["N"] == 128][0]
+    print(f"# paper check: saving(N=48)={r48['saving_pct']:.1f}% (paper 66.7%), "
+          f"saving(N=128)={r128['saving_pct']:.1f}% (paper 87.5%)")
+
+
+if __name__ == "__main__":
+    main()

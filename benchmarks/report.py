@@ -1,0 +1,68 @@
+"""Builds the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json (written by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out_dir: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(rows: List[Dict], mesh: str = "single", tag: str = "") -> str:
+    rows = [r for r in rows if r["mesh"] == mesh and r.get("tag", "") == tag
+            and r["mode"] == "sfl"]
+    out = ["| arch | shape | compile s | args GB/dev | temp GB/dev | micro | opt |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+            f"{m['argument_gb']:.2f} | {m['temp_gb']:.2f} | "
+            f"{r.get('micro', 1)} | {r['opt']} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict], mesh: str = "single", tag: str = "") -> str:
+    rows = [r for r in rows if r["mesh"] == mesh and r.get("tag", "") == tag
+            and r["mode"] == "sfl" and "roofline" in r]
+    out = ["| arch | shape | compute s | memory s (raw/fused) | collective s | "
+           "dominant | useful | frac | pod GB/dev | ici GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        mf = rf.get("memory_fused_s", rf["memory_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+            f"{rf['memory_s']:.3f} / {mf:.3f} | {rf['collective_s']:.3f} | "
+            f"{rf.get('dominant_fused', rf['dominant'])} | "
+            f"{r.get('useful_ratio', 0):.2f} | "
+            f"{rf.get('roofline_frac_fused', rf.get('roofline_frac', 0)):.3f} | "
+            f"{rf['coll_pod_bytes']/1e9:.2f} | {rf['coll_ici_bytes']/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    print(f"{len(rows)} dry-run records")
+    for mesh in ("single", "multi"):
+        n = len([r for r in rows if r['mesh'] == mesh])
+        print(f"\n## {mesh}-pod ({n} cells)\n")
+        print(dryrun_table(rows, mesh))
+        print()
+        print(roofline_table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

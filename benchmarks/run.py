@@ -1,0 +1,46 @@
+"""Benchmark harness — one bench per paper table/figure + kernel timing.
+
+``python -m benchmarks.run [--full] [--only NAME]`` prints
+``name,us_per_call,derived``-style CSV blocks per bench:
+  upstream  — Fig. 2a (upstream Mb per round vs N)
+  involved  — Fig. 2b (involved clients under the 25 s deadline)
+  accuracy  — Fig. 2c (FedAvg accuracy, SFL vs classical)
+  kernels   — ONU-AF / quantize micro-bench
+  report    — EXPERIMENTS tables from results/dryrun/*.json (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="upstream|involved|accuracy|kernels|report")
+    ap.add_argument("--full", action="store_true",
+                    help="accuracy bench with the full LEAF CNN (slow)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_involved, bench_kernels,
+                            bench_upstream, report)
+
+    benches = {
+        "upstream": bench_upstream.main,
+        "involved": bench_involved.main,
+        "kernels": bench_kernels.main,
+        "accuracy": bench_accuracy.main,
+    }
+    names = [args.only] if args.only else list(benches)
+    for name in names:
+        if name == "report":
+            report.main()
+            continue
+        t0 = time.time()
+        print(f"\n=== {name} ===")
+        benches[name]()
+        print(f"=== {name} done in {time.time()-t0:.1f}s ===")
+
+
+if __name__ == "__main__":
+    main()

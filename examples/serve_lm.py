@@ -1,0 +1,30 @@
+"""Batched serving example: prefill a prompt batch, decode with KV caches /
+recurrent states (works for every assigned family incl. RWKV6 and
+RecurrentGemma ring-buffer local attention).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    import repro.launch.serve as S
+    sys.argv = ["serve", "--arch", args.arch, "--smoke",
+                "--batch", str(args.batch), "--prompt-len", str(args.prompt_len),
+                "--gen", str(args.gen)]
+    S.main()
+
+
+if __name__ == "__main__":
+    main()

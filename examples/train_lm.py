@@ -1,0 +1,34 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the SFL gradient regime (client weighting + deadline masks from the
+PON simulator folded into every step), checkpointing along the way.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    from repro import configs
+    cfg = configs.get("olmo-100m")
+    print(f"model: {cfg.name}, {cfg.param_count/1e6:.0f}M params")
+
+    import repro.launch.train as T
+    sys.argv = ["train", "--arch", "olmo-100m", "--steps", str(args.steps),
+                "--batch", str(args.batch), "--seq", str(args.seq),
+                "--ckpt", args.ckpt, "--log-every", "10"]
+    T.main()
+
+
+if __name__ == "__main__":
+    main()

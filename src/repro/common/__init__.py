@@ -1,0 +1,25 @@
+from repro.common.pytree import (
+    tree_add,
+    tree_scale,
+    tree_zeros_like,
+    tree_size_bytes,
+    tree_global_norm,
+    tree_cast,
+)
+from repro.common.sharding import (
+    logical_to_physical,
+    pad_to_multiple,
+    shard_or_replicate,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_zeros_like",
+    "tree_size_bytes",
+    "tree_global_norm",
+    "tree_cast",
+    "logical_to_physical",
+    "pad_to_multiple",
+    "shard_or_replicate",
+]

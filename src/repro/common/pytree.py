@@ -1,0 +1,78 @@
+"""Pytree helpers used across the framework.
+
+Everything here is intentionally dependency-free (pure jax) — no flax/optax
+in this environment, so the whole parameter/optimizer machinery operates on
+nested dicts of jnp arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, elementwise over matching pytrees."""
+    return jax.tree.map(lambda u, v: alpha * u + v, x, y)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return sum(leaves)
+
+
+def tree_global_norm(a):
+    sq = jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a))
+    return jnp.sqrt(sum(sq))
+
+
+def tree_count_params(a) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(a)))
+
+
+def tree_size_bytes(a) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(a)))
+
+
+def tree_any_nan(a):
+    flags = jax.tree.leaves(jax.tree.map(lambda x: jnp.any(jnp.isnan(x)), a))
+    out = flags[0]
+    for f in flags[1:]:
+        out = jnp.logical_or(out, f)
+    return out
+
+
+def tree_stack(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of tree_stack: a pytree with leading axis n -> list of pytrees."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)

@@ -1,0 +1,56 @@
+"""Architecture registry: the 10 assigned configs + the paper's FEMNIST CNN.
+
+Every module defines ``CONFIG`` (exact assigned numbers) and the registry
+offers ``get(name)`` / ``get_smoke(name)`` (reduced same-family configs for
+CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "arctic_480b",
+    "qwen3_moe_30b_a3b",
+    "musicgen_large",
+    "qwen1_5_110b",
+    "deepseek_coder_33b",
+    "olmo_1b",
+    "qwen2_0_5b",
+    "llama3_2_vision_90b",
+    "recurrentgemma_9b",
+    "rwkv6_3b",
+    "femnist_cnn",
+)
+
+_ALIASES = {
+    "arctic-480b": "arctic_480b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "musicgen-large": "musicgen_large",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "olmo-1b": "olmo_1b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str, **overrides) -> ModelConfig:
+    return get(name).reduced(**overrides)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}

@@ -1,0 +1,4 @@
+"""The paper's own model: LEAF FEMNIST CNN (2x conv5x5 + fc2048 + 62-way)."""
+from repro.models.femnist_cnn import femnist_config
+
+CONFIG = femnist_config()

@@ -1,0 +1,16 @@
+"""llama-3.2-vision-90b [vlm] — cross-attention image layers every 5th layer.
+
+[hf:meta-llama/Llama-3.2-90B-Vision; unverified] 100L d_model=8192 64H
+(GQA kv=8) d_ff=28672 vocab=128256. Vision frontend is a STUB:
+input_specs() provides precomputed patch embeddings (B, 1024, d_model)
+consumed by the cross-attention layers. Unit = 4 self-attn + 1 cross-attn.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=28672,
+    vocab_size=128256, rope_theta=5e5,
+    block_pattern=("attn", "attn", "attn", "attn", "cross"),
+    frontend="patches", n_frontend_tokens=1024, cross_attn_period=5,
+)

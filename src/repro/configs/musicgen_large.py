@@ -1,0 +1,14 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=2048 32H (kv=32, MHA) d_ff=8192
+vocab=2048. The EnCodec frontend is a STUB: input_specs() provides
+precomputed frame embeddings (B, S, d_model); targets are codec tokens.
+MusicGen uses a GELU (non-gated) FFN and LayerNorm.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab_size=2048, mlp="gelu", norm="ln", frontend="frames",
+)

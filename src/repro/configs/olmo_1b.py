@@ -1,0 +1,12 @@
+"""olmo-1b [dense] — non-parametric LayerNorm, tied embeddings.
+
+[arXiv:2402.00838; hf] 16L d_model=2048 16H (kv=16, MHA) d_ff=8192
+vocab=50304.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab_size=50304, norm="nonparam", tie_embeddings=True,
+)

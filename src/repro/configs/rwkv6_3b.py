@@ -1,0 +1,13 @@
+"""rwkv6-3b [ssm] — Finch: attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf] 32L d_model=2560 (attn-free) d_ff=8960 vocab=65536.
+head_dim=64 -> 40 wkv heads (padded to 48 for 16-way TP).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=0, n_kv_heads=0, d_ff=8960,
+    vocab_size=65536, block_pattern=("rwkv",), rwkv_head_dim=64,
+    norm="ln", rwkv_chunk=64,
+)

@@ -1,0 +1,3 @@
+from repro.core import aggregation, fedavg, selection, compression
+
+__all__ = ["aggregation", "fedavg", "selection", "compression"]

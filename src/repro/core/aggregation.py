@@ -1,0 +1,177 @@
+"""SFL two-step aggregation — the paper's contribution, as collectives.
+
+The paper's protocol (PON):
+    step 1 (ONU):  θ_i = Σ_{j ∈ ONU_i} k_ij · w_ij      (in-ONU weighted sum)
+    step 2 (CPS):  w_g = Σ_i θ_i / K,  K = Σ k_ij·mask   (cross-PON reduce)
+
+TPU mapping (see DESIGN.md): ONUs ≙ the pod-local ``data`` axis (cheap ICI),
+the PON upstream ≙ the cross-pod ``pod`` axis (scarce DCI). Two-step =
+reduce-scatter('data') → all-reduce('pod') → all-gather('data'): the bytes
+crossing the constrained hop are 1/|data| of the model — constant in the
+number of in-pod participants, which is the paper's headline property.
+
+The classical-FL benchmark is the flat all-reduce over ('pod','data') —
+every participant's full update crosses the constrained hop.
+
+Three interchangeable implementations (tested equal to a numpy oracle):
+  * ``segment_aggregate``  — client-stacked arrays + ONU id segment-sum
+    (the faithful FL engine; runs on one host, any device count)
+  * ``two_step_allreduce`` / ``classical_allreduce`` — shard_map collectives
+    for per-device values (the scalable gradient regime)
+  * int8 stochastic-rounding compression of the cross-pod hop (beyond-paper)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+try:
+    from jax import shard_map  # jax >= 0.8
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+# ---------------------------------------------------------------------------
+# client-stacked (faithful FL regime)
+# ---------------------------------------------------------------------------
+
+def segment_aggregate(client_tree, weights, mask, onu_ids, n_onus: int):
+    """Exactly the paper's two-step aggregation over client-stacked pytrees.
+
+    client_tree: pytree with leading client axis C (local models / deltas)
+    weights:     (C,) sample counts k_ij
+    mask:        (C,) 1.0 = involved (selected & met the 25 s deadline)
+    onu_ids:     (C,) int32 — which ONU each client hangs off
+    Returns (aggregated tree (client-axis dropped), onu_partials, K).
+    ``onu_partials`` (n_onus leading axis) is θ — what actually crosses the
+    PON upstream; benchmarks account its bytes.
+    """
+    w = (weights * mask).astype(jnp.float32)
+    K = jnp.sum(w)
+
+    def per_leaf(x):
+        xf = x.astype(jnp.float32)
+        wx = xf * w.reshape((-1,) + (1,) * (xf.ndim - 1))
+        theta = jax.ops.segment_sum(wx, onu_ids, num_segments=n_onus)  # step 1 (ONU)
+        return theta
+
+    thetas = jax.tree.map(per_leaf, client_tree)
+    agg = jax.tree.map(lambda th: jnp.sum(th, axis=0) / jnp.maximum(K, 1e-9), thetas)  # step 2 (CPS)
+    return agg, thetas, K
+
+
+def classical_aggregate(client_tree, weights, mask):
+    """FedAvg without the ONU step (benchmark): w_g = Σ k·mask·w / K."""
+    w = (weights * mask).astype(jnp.float32)
+    K = jnp.sum(w)
+    agg = jax.tree.map(
+        lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0))
+        / jnp.maximum(K, 1e-9),
+        client_tree)
+    return agg, K
+
+
+# ---------------------------------------------------------------------------
+# collective (scalable gradient regime) — used inside shard_map
+# ---------------------------------------------------------------------------
+
+def _flatten_pad(x, n: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def _quantize_int8(x, key):
+    """Unbiased stochastic-rounding int8 quantization (per-tensor scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    y = x / scale
+    noise = jax.random.uniform(key, y.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def two_step_allreduce(tree, data_axis: str = "data", pod_axis: Optional[str] = "pod",
+                       compress: Optional[str] = None, key=None):
+    """Hierarchical weighted-sum all-reduce (call inside shard_map).
+
+    reduce-scatter over data_axis (ONU AF), all-reduce over pod_axis on the
+    scattered shard (CPS), all-gather over data_axis (global broadcast leg).
+    compress='int8' stochastically quantizes the cross-pod hop (beyond-paper;
+    the DCI traffic drops another 2x vs bf16 / 4x vs f32).
+    """
+    n_data = jax.lax.psum(1, data_axis)
+
+    def per_leaf(x, leaf_key):
+        xf = x.astype(jnp.float32)
+        flat, pad = _flatten_pad(xf, n_data)
+        shard = jax.lax.psum_scatter(flat, data_axis, scatter_dimension=0, tiled=True)
+        if pod_axis is not None:
+            if compress == "int8":
+                q, scale = _quantize_int8(shard, leaf_key)
+                # sum of dequantized shards across pods; int8 crosses the DCI
+                q_all = jax.lax.all_gather(q, pod_axis, tiled=False)
+                s_all = jax.lax.all_gather(scale, pod_axis, tiled=False)
+                shard = jnp.sum(q_all.astype(jnp.float32) * s_all[:, None], axis=0)
+            else:
+                shard = jax.lax.psum(shard, pod_axis)
+        full = jax.lax.all_gather(shard, data_axis, tiled=True)
+        if pad:
+            full = full[:-pad]
+        return full.reshape(x.shape)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [per_leaf(l, k) for l, k in zip(leaves, keys)])
+
+
+def classical_allreduce(tree, axes: Tuple[str, ...]):
+    """Flat all-reduce over all client axes (the paper's benchmark)."""
+    return jax.tree.map(lambda x: jax.lax.psum(x.astype(jnp.float32), axes), tree)
+
+
+def make_weighted_gradient_aggregator(mesh: Mesh, mode: str = "two_step",
+                                      compress: Optional[str] = None):
+    """Returns fn(local_grads, local_weight) -> (mean_grads, K) under shard_map.
+
+    local_grads: this device's Σ_clients k·g (already weighted locally);
+    local_weight: scalar Σ_local k·mask. ``mode`` picks the schedule:
+      two_step  — the SFL hierarchical schedule
+      classical — flat all-reduce (benchmark)
+    """
+    axis_names = tuple(mesh.axis_names)
+    has_pod = "pod" in axis_names
+    client_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+
+    def agg(grads, weight, key=None):
+        K = jax.lax.psum(weight, client_axes)
+        if mode == "classical" or not has_pod:
+            if mode == "two_step" and not has_pod:
+                # single-pod: ONU step only (reduce-scatter+all-gather == AR)
+                summed = two_step_allreduce(grads, data_axis="data", pod_axis=None)
+            else:
+                summed = classical_allreduce(grads, client_axes)
+        else:
+            summed = two_step_allreduce(grads, data_axis="data", pod_axis="pod",
+                                        compress=compress, key=key)
+        mean = jax.tree.map(lambda x: x / jnp.maximum(K, 1e-9), summed)
+        return mean, K
+
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle (tests)
+# ---------------------------------------------------------------------------
+
+def numpy_weighted_mean(stack: np.ndarray, weights: np.ndarray, mask: np.ndarray):
+    w = (weights * mask).astype(np.float64)
+    K = w.sum()
+    return np.tensordot(w, stack.astype(np.float64), axes=(0, 0)) / max(K, 1e-9), K

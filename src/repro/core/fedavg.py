@@ -1,0 +1,113 @@
+"""Faithful FedAvg / SFL round engine (client-stacked, H local steps).
+
+This is the paper-scale regime: every selected client holds its own model
+copy, runs H local SGD steps on its own (non-IID) data, and the round ends
+with the two-step aggregation (``segment_aggregate``) under the PON
+simulator's participation mask. Reproduces Fig. 2 end-to-end on CPU.
+
+The scalable gradient regime for the big LM archs lives in
+``repro/launch/train.py`` (same aggregation semantics, collective form).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    n_onus: int = 16
+    clients_per_onu: int = 20
+    n_selected: int = 48            # N in the paper (48 / 128 in Fig. 2)
+    local_steps: int = 5            # H: minibatch SGD steps per round
+    local_batch: int = 10           # LEAF defaults
+    local_lr: float = 0.06
+    mode: str = "sfl"               # sfl | classical
+    sync_threshold_s: float = 25.0  # the paper's deadline
+    seed: int = 0
+    client_chunk: int = 16          # vmap chunking (host-memory bound)
+
+    @property
+    def n_clients(self) -> int:
+        return self.n_onus * self.clients_per_onu
+
+
+def onu_of_client(fl: FLConfig) -> np.ndarray:
+    """Static topology: client c hangs off ONU c // clients_per_onu."""
+    return np.arange(fl.n_clients) // fl.clients_per_onu
+
+
+def local_sgd(params, batches: Dict[str, jax.Array], loss_fn: Callable,
+              lr: float, steps: int):
+    """H steps of SGD on one client's minibatches.
+
+    batches: dict of arrays with leading (steps, batch, ...) axes.
+    """
+    def step(p, batch):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        p = jax.tree.map(lambda w, gw: (w.astype(jnp.float32) - lr * gw).astype(w.dtype), p, g)
+        return p, l
+    p, losses = jax.lax.scan(step, params,
+                             jax.tree.map(lambda x: x[:steps], batches))
+    return p, jnp.mean(losses)
+
+
+def train_selected_clients(global_params, client_batches, loss_fn: Callable,
+                           fl: FLConfig):
+    """Run local training for all selected clients; returns stacked deltas.
+
+    client_batches: dict of arrays with leading (n_sel, steps, batch, ...)
+    axes. vmap is chunked (client_chunk at a time) to bound host memory.
+    """
+    def one_client(batches):
+        p, l = local_sgd(global_params, batches, loss_fn, fl.local_lr, fl.local_steps)
+        delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                             p, global_params)
+        return delta, l
+
+    n_sel = jax.tree.leaves(client_batches)[0].shape[0]
+    chunk = max(1, min(fl.client_chunk, n_sel))
+    deltas, losses = [], []
+    fn = jax.vmap(one_client)
+    for lo in range(0, n_sel, chunk):
+        cb = jax.tree.map(lambda x: x[lo:lo + chunk], client_batches)
+        d, l = fn(cb)
+        deltas.append(d)
+        losses.append(l)
+    deltas = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *deltas)
+    return deltas, jnp.concatenate(losses)
+
+
+def apply_round(global_params, deltas, weights, mask, onu_ids, n_onus: int,
+                mode: str, server_lr: float = 1.0):
+    """Aggregate client deltas and update the global model.
+
+    Returns (new_params, stats). Both modes compute identical updates —
+    the difference is the *transport* (what crosses the PON upstream),
+    which the stats account for.
+    """
+    if mode == "sfl":
+        agg, thetas, K = aggregation.segment_aggregate(
+            deltas, weights, mask, onu_ids, n_onus)
+        onu_active = jnp.zeros((n_onus,), jnp.float32).at[onu_ids].add(mask)
+        uplink_models = jnp.sum(onu_active > 0)      # one θ per active ONU
+    else:
+        agg, K = aggregation.classical_aggregate(deltas, weights, mask)
+        uplink_models = jnp.sum(mask)                # every involved client uploads
+    new_params = jax.tree.map(
+        lambda w, d: (w.astype(jnp.float32) + server_lr * d).astype(w.dtype),
+        global_params, agg)
+    stats = {"K": K, "uplink_models": uplink_models,
+             "involved": jnp.sum(mask)}
+    return new_params, stats
+
+
+def evaluate(params, eval_batch, loss_fn: Callable):
+    loss, metrics = loss_fn(params, eval_batch)
+    return {"eval_loss": loss, **{f"eval_{k}": v for k, v in metrics.items()}}

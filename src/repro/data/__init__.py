@@ -1,0 +1,3 @@
+from repro.data import femnist, lm
+
+__all__ = ["femnist", "lm"]

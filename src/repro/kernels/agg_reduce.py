@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: the ONU aggregation function (AF) — masked weighted
+reduction over a stacked client axis.
+
+    out[n] = Σ_c  weight[c] · mask[c] · x[c, n]
+
+This is the paper's per-ONU hot loop (θ_i = Σ_j k_ij w_ij) in the
+client-stacked FL regime: x is a (clients, flat_params) tile of local model
+deltas. The kernel tiles the parameter axis into VMEM-resident blocks
+aligned to the VPU lane width (multiples of 128) and keeps the full client
+axis resident (C is small: ≤ clients-per-ONU), accumulating in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 2048  # f32 VMEM tile: C×2048×4B ≤ ~0.5 MB for C ≤ 64
+
+
+def _agg_kernel(x_ref, w_ref, out_ref):
+    # x_ref: (C, BLOCK_N) in VMEM; w_ref: (C, 1); out: (BLOCK_N,)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)           # (C, 1) — weight·mask folded
+    out_ref[...] = jnp.sum(x * w, axis=0)
+
+
+def agg_reduce(x, weights, mask, *, block_n: int = BLOCK_N, interpret: bool = False):
+    """x: (C, N) f32/bf16; weights, mask: (C,) -> (N,) f32.
+
+    N is padded to a block multiple internally.
+    """
+    C, N = x.shape
+    w = (weights.astype(jnp.float32) * mask.astype(jnp.float32)).reshape(C, 1)
+    bn = min(block_n, max(128, 128 * ((N + 127) // 128)))
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    npad = N + pad
+    grid = (npad // bn,)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, bn), lambda i: (0, i)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+    return out[:N]

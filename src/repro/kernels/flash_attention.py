@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Grid (B, H, nQ, nKV); the innermost kv axis is the sequential reduction —
+running max / sum / accumulator live in VMEM scratch across kv steps
+(the standard TPU flash pattern). Q-block and KV-block shapes are
+hardware-aligned ((multiple-of-8, head_dim) tiles, head_dim ∈ {64,128,256}).
+
+GQA is expressed in the k/v BlockSpec index maps (query head h reads kv
+head h // group) — no materialized head broadcast. Causal and
+sliding-window blocks that are fully masked are skipped via pl.when
+(on TPU: no MXU work issued for those grid steps).
+
+This kernel is the serving/prefill hot path; training uses the chunked-jnp
+attention in models/layers.py (whose math this kernel must match — see
+tests/test_kernels.py sweeps against kernels/ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, bq: int, bk: int, n_kv: int, causal: bool,
+                  window: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    needed = (k_start <= q_start + bq - 1) if causal else True
+    if window:
+        needed = jnp.logical_and(needed, k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = cols <= rows
+        if window:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd).
+
+    H must be a multiple of KV (GQA groups). S must divide by the block
+    sizes (callers pad; assignment shapes are powers of two).
+    """
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    assert H % KV == 0
+    g = H // KV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    n_q, n_kv = S // bq, S // bk
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(hd))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, bq=bq, bk=bk, n_kv=n_kv,
+        causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

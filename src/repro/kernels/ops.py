@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernels with backend dispatch.
+
+On TPU the Pallas kernels run compiled (interpret=False); on CPU (this
+container) they execute in interpret mode when explicitly requested (tests)
+and otherwise fall back to the jnp reference — which is also what the
+GSPMD dry-run lowers, since Mosaic kernels cannot lower for the CPU
+backend. The dispatch is a single choke point so a real TPU deployment
+flips one flag.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.agg_reduce import agg_reduce as _agg_pallas
+from repro.kernels.quantize import quantize_int8 as _quant_pallas
+from repro.kernels.quantize import dequantize_int8 as _dequant_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(use_pallas: Optional[bool]) -> str:
+    """'compiled' | 'interpret' | 'ref'."""
+    if use_pallas is None:
+        return "compiled" if _on_tpu() else "ref"
+    if use_pallas:
+        return "compiled" if _on_tpu() else "interpret"
+    return "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def agg_reduce(x, weights, mask, use_pallas: Optional[bool] = None):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.agg_reduce_ref(x, weights, mask)
+    return _agg_pallas(x, weights, mask, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def quantize_int8(x, key, use_pallas: Optional[bool] = None):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.quantize_int8_ref(x, key)
+    return _quant_pallas(x, key, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def dequantize_int8(q, scale, use_pallas: Optional[bool] = None):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.dequantize_int8_ref(q, scale)
+    return _dequant_pallas(q, scale, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_pallas: Optional[bool] = None):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def rglru_scan(a, b, h0=None, use_pallas: Optional[bool] = None):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.rglru_scan_ref(a, b, h0)
+    return _rglru_pallas(a, b, h0, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def rwkv6_scan(r, k, v, logw, u, use_pallas: Optional[bool] = None):
+    m = _mode(use_pallas)
+    if m == "ref":
+        return ref.rwkv6_ref(r, k, v, logw, u)
+    return _rwkv_pallas(r, k, v, logw, u, interpret=(m == "interpret"))

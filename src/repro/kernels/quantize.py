@@ -1,0 +1,75 @@
+"""Pallas TPU kernels: int8 stochastic-rounding quantize / dequantize.
+
+Used on the constrained uplink (cross-pod hop / client→ONU leg) to halve
+bf16 traffic (beyond-paper optimization; see core/compression.py for the
+jnp form and the error-feedback wrapper).
+
+The uniform noise is generated outside the kernel (jax.random) and streamed
+in — keeps the kernel portable across Mosaic versions and bit-exact with
+the jnp reference. Tiles are (8k,) f32 VMEM blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192
+
+
+def _quant_kernel(x_ref, noise_ref, scale_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = scale_ref[0]
+    y = x / s + (noise_ref[...] - 0.5)
+    q_ref[...] = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+
+
+def _dequant_kernel(q_ref, scale_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+def quantize_int8(x, key, *, block: int = BLOCK, interpret: bool = False):
+    """x: (N,) -> (q int8 (N,), scale f32 scalar). Unbiased (stochastic)."""
+    (N,) = x.shape
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    noise = jax.random.uniform(key, (N,), jnp.float32)
+    bn = min(block, max(128, 128 * ((N + 127) // 128)))
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        noise = jnp.pad(noise, (0, pad))
+    npad = N + pad
+    q = pl.pallas_call(
+        _quant_kernel,
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.int8),
+        interpret=interpret,
+    )(x, noise, scale.reshape(1))
+    return q[:N], scale
+
+
+def dequantize_int8(q, scale, *, block: int = BLOCK, interpret: bool = False):
+    (N,) = q.shape
+    bn = min(block, max(128, 128 * ((N + 127) // 128)))
+    pad = (-N) % bn
+    if pad:
+        q = jnp.pad(q, (0, pad))
+    npad = N + pad
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(q, scale.reshape(1))
+    return x[:N]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematically-direct form — no chunking, no online
+softmax, no clamping tricks — computed in f32/f64-ish precision. The test
+suite sweeps shapes/dtypes and asserts the kernels (interpret=True) match
+these within tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def agg_reduce_ref(x, weights, mask):
+    """(C, N), (C,), (C,) -> (N,) = Σ_c w_c·m_c·x_c."""
+    w = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    return jnp.einsum("c,cn->n", w, x.astype(jnp.float32))
+
+
+def quantize_int8_ref(x, key):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    noise = jax.random.uniform(key, x.shape, jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale + (noise - 0.5)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    """q (B,H,S,hd); k,v (B,KV,S,hd). Naive full-matrix attention."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(hd))
+    kf = jnp.repeat(k, g, axis=1)
+    vf = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = idx[None, :] <= idx[:, None]
+    if window:
+        mask = mask & (idx[None, :] > idx[:, None] - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Sequential h_t = a_t·h_{t-1} + b_t. a, b: (B, S, C)."""
+    B, S, C = a.shape
+    h = jnp.zeros((B, C), jnp.float32) if h0 is None else h0
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    hl, hs = jax.lax.scan(step, h, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), hl
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Exact sequential RWKV6 recurrence.
+
+    r,k,v,logw: (B,H,S,hd); u: (H,hd).
+    o_t = r_t·(S_{t-1} + (u⊙k_t)⊗v_t);  S_t = diag(w_t)S_{t-1} + k_t⊗v_t.
+    Returns (o (B,H,S,hd) f32, S_final (B,H,hd,hd) f32)."""
+    B, H, S, hd = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(Sm, xs):
+        rt, kt, vt, wt = xs                      # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, Sm + u[None, :, :, None] * kv)
+        Sm = wt[..., :, None] * Sm + kv
+        return Sm, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, w))
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_fin, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 2, 0, 3), S_fin

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: RWKV6 chunkwise wkv with data-dependent decay.
+
+Grid (B, H, nChunks) — chunks innermost (sequential); the per-head state
+matrix S (hd × hd, f32) persists in VMEM scratch across chunk steps.
+
+Within a chunk of W tokens the intra-chunk pair matrix
+    att[t, j] = Σ_d r[t,d]·k[j,d]·exp(c_{t-1}[d] − c[j][d])   (j < t)
+is accumulated over head-dim subtiles (dt = 16 channels at a time) so the
+(W, W, dt) transient stays ≈1 MB in VMEM; exponents are clamped at 0 which
+is exact for the causal pairs (see models/rwkv6.py for the derivation) and
+prevents overflow on the masked ones. Cross-chunk flow and the state update
+are two (W,hd)×(hd,hd)-class matmuls on the MXU.
+
+Must match kernels/ref.py::rwkv6_ref (the exact sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_W = 64
+DT = 16  # head-dim subtile for the pair accumulation
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sout_ref, s_scr,
+                 *, W: int, hd: int):
+    ci = pl.program_id(2)
+    n_c = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)        # (W, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)      # log decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)           # (hd,)
+
+    c = jnp.cumsum(lw, axis=0)
+    c_excl = c - lw
+    S_in = s_scr[...]
+
+    # cross-chunk: (r ⊙ exp(c_excl)) @ S_in
+    o = jax.lax.dot(r * jnp.exp(c_excl), S_in)
+
+    # intra-chunk pair matrix, accumulated over hd subtiles
+    def subtile(i, att):
+        dsl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * DT, DT, axis=1)
+        # pairwise decay difference, clamped at 0 (exact on causal pairs)
+        d = dsl(c_excl)[:, None, :] - dsl(c)[None, :, :]      # (W, W, DT)
+        pair = dsl(r)[:, None, :] * dsl(k)[None, :, :] * jnp.exp(
+            jnp.minimum(d, 0.0))
+        return att + jnp.sum(pair, axis=-1)
+
+    att = jax.lax.fori_loop(0, hd // DT, subtile, jnp.zeros((W, W), jnp.float32))
+    rows = jax.lax.broadcasted_iota(jnp.int32, (W, W), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (W, W), 1)
+    att = jnp.where(cols < rows, att, 0.0)
+
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)              # (W,)
+    o = o + jax.lax.dot(att, v) + diag[:, None] * v
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    # state update
+    c_tot = c[-1]                                            # (hd,)
+    k_dec = k * jnp.exp(c_tot[None, :] - c)
+    s_scr[...] = S_in * jnp.exp(c_tot)[:, None] + jax.lax.dot(k_dec.T, v)
+
+    @pl.when(ci == n_c - 1)
+    def _final():
+        sout_ref[0, 0] = s_scr[...]
+
+
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = DEFAULT_W,
+               interpret: bool = False):
+    """r,k,v,logw: (B, H, S, hd) (logw ≤ 0, f32); u: (H, hd).
+
+    Returns (o (B, H, S, hd) f32, S_final (B, H, hd, hd) f32)."""
+    B, H, S, hd = r.shape
+    W = min(chunk, S)
+    assert S % W == 0 and hd % DT == 0, (S, W, hd)
+    grid = (B, H, S // W)
+    kernel = functools.partial(_rwkv_kernel, W=W, hd=hd)
+    o, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, W, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, W, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, W, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, W, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, W, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return o, s_out

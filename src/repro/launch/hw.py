@@ -1,0 +1,19 @@
+"""Target hardware model (TPU v5e-class) for the derived roofline.
+
+This container is CPU-only; these constants parameterize the §Roofline
+terms computed from the compiled dry-run artifacts (per system prompt):
+    compute    = HLO_FLOPs  / (chips × PEAK_FLOPS)
+    memory     = HLO_bytes  / (chips × HBM_BW)
+    collective = coll_bytes / (chips × LINK_BW)   [per link class]
+"""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (intra-pod axes)
+DCI_BW = 25e9                 # bytes/s effective for the cross-pod hop
+                              # (data-center interconnect; scarcer than ICI —
+                              # the "PON upstream" of the mapping; used only
+                              # to weight the pod-axis share of the
+                              # collective term)
+VMEM_BYTES = 128 * 2 ** 20    # ~128 MB vector memory
+HBM_BYTES = 16 * 2 ** 30      # 16 GB per chip

@@ -1,0 +1,30 @@
+from repro.models.config import (
+    ModelConfig,
+    ShapeConfig,
+    ALL_SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    shape_by_name,
+)
+from repro.models import transformer, femnist_cnn
+
+
+def init_params(cfg, key=None, abstract=False, tp: int = 16):
+    if cfg.family == "cnn":
+        return femnist_cnn.init_params(cfg, key, abstract, tp)
+    return transformer.init_params(cfg, key, abstract, tp)
+
+
+def loss_fn(params, batch, cfg, rules, **kw):
+    if cfg.family == "cnn":
+        return femnist_cnn.loss_fn(params, batch, cfg, rules)
+    return transformer.loss_fn(params, batch, cfg, rules, **kw)
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "shape_by_name", "init_params", "loss_fn",
+    "transformer", "femnist_cnn",
+]

@@ -1,0 +1,109 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU + temporal conv.
+
+The RG-LRU recurrence h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+is elementwise-linear, so train/prefill use ``lax.associative_scan``
+(log-depth tree, no while loops — fully counted by HLO cost analysis) and
+decode is a single fused state update.
+
+Tensor parallelism: the recurrence width is channel-sharded over the
+``model`` axis (everything is elementwise along channels), gates are
+channel-local linears sharded like MLP weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import ShardingRules, constrain
+
+_C_RGLRU = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_params(pb, cfg, name: str = "rglru"):
+    d, r, cw = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    sub = pb.sub(name)
+    sub.param("w_in", (d, r), ("embed", "mlp"))
+    sub.param("w_gate", (d, r), ("embed", "mlp"))
+    sub.param("w_out", (r, d), ("mlp", "embed"))
+    sub.param("conv_w", (cw, r), ("conv", "mlp"), scale=0.5)
+    sub.param("conv_b", (r,), ("mlp",), init="zeros")
+    # RG-LRU gates: per-channel linear (r x r would be d²-heavy; Griffin uses
+    # block-diagonal/diagonal gates — we use the diagonal variant + bias)
+    sub.param("w_rg", (d, r), ("embed", "mlp"), scale=0.5)
+    sub.param("w_ig", (d, r), ("embed", "mlp"), scale=0.5)
+    sub.param("lam", (r,), ("mlp",), init="linspace", scale=2.0)  # Λ spread
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv along time via shifted adds (exact, conv-free).
+
+    u: (B, S, r). state: (B, cw-1, r) trailing context for decode/chunks.
+    Returns (y, new_state).
+    """
+    B, S, r = u.shape
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, cw - 1, r), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)            # (B, S+cw-1, r)
+    y = jnp.zeros_like(u)
+    for i in range(cw):
+        y = y + ext[:, i:i + S, :] * w[i]
+    y = y + b
+    new_state = ext[:, S:, :] if False else ext[:, ext.shape[1] - (cw - 1):, :]
+    return y, new_state
+
+
+def rglru_scan(a, bx):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan over axis 1."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    af, bf = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return bf
+
+
+def rglru_block(x, p, cfg, rules: ShardingRules, state=None):
+    """x: (B, S, d) -> (B, S, d); state: None or {'conv':…, 'h':…} (decode)."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in"])
+    g = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    u = constrain(u, rules, ("batch", "seq", "mlp"))
+
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+
+    rg = jax.nn.sigmoid(jnp.einsum("bsd,dr->bsr", x, p["w_rg"]).astype(jnp.float32))
+    ig = jax.nn.sigmoid(jnp.einsum("bsd,dr->bsr", x, p["w_ig"]).astype(jnp.float32))
+    log_a = -_C_RGLRU * rg * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * ig * u.astype(jnp.float32)
+
+    if state is None:
+        h = rglru_scan(a, bx)
+        new_h = h[:, -1, :]
+    else:
+        h = a * state["h"][:, None, :] + bx      # S == 1 decode step
+        new_h = h[:, -1, :]
+    h = h.astype(x.dtype) * g
+    out = jnp.einsum("bsr,rd->bsd", h, p["w_out"])
+    out = constrain(out, rules, ("batch", "seq", "embed"))
+    new_state = {"conv": new_conv, "h": new_h}
+    return out, new_state
+
+
+def rglru_init_state(cfg, batch: int, dtype):
+    r, cw = cfg.rnn_width, cfg.conv_width
+    return {
+        "conv": jnp.zeros((batch, cw - 1, r), dtype),
+        "h": jnp.zeros((batch, r), jnp.float32),
+    }
+
+
+def rglru_state_abstract(cfg, batch: int, dtype):
+    r, cw = cfg.rnn_width, cfg.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cw - 1, r), dtype),
+        "h": jax.ShapeDtypeStruct((batch, r), jnp.float32),
+    }

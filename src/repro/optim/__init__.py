@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    sgd_init, sgd_update,
+    adamw_init, adamw_update,
+    make_optimizer,
+    cosine_lr,
+)
+
+__all__ = [
+    "sgd_init", "sgd_update", "adamw_init", "adamw_update",
+    "make_optimizer", "cosine_lr",
+]

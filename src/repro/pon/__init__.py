@@ -1,0 +1,13 @@
+from repro.pon.timing import (
+    PonConfig,
+    round_times,
+    train_times,
+    MODEL_UPDATE_MBITS,
+    SLICE_MBPS,
+    SYNC_THRESHOLD_S,
+)
+
+__all__ = [
+    "PonConfig", "round_times", "train_times",
+    "MODEL_UPDATE_MBITS", "SLICE_MBPS", "SYNC_THRESHOLD_S",
+]

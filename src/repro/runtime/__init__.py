@@ -1,0 +1,3 @@
+from repro.runtime.failures import FailureModel, MembershipTable, renormalized_weights
+
+__all__ = ["FailureModel", "MembershipTable", "renormalized_weights"]

@@ -1,0 +1,100 @@
+"""PON simulator vs the paper's Fig. 2 claims + timing-model properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.pon import PonConfig, round_times, train_times
+
+
+def _setup(seed=0):
+    cfg = PonConfig()
+    rng = np.random.default_rng(seed)
+    onu = np.arange(cfg.n_clients) // cfg.clients_per_onu
+    k = rng.integers(50, 400, cfg.n_clients)
+    return cfg, rng, onu, k
+
+
+def test_upstream_constant_vs_linear():
+    """Fig 2a: classical bytes ∝ N; SFL bytes == n_active_onus (constant)."""
+    cfg, rng, onu, k = _setup()
+    ups_c, ups_s = [], []
+    for N in (32, 64, 128):
+        sel = rng.choice(cfg.n_clients, N, replace=False)
+        ups_c.append(round_times(cfg, rng, sel, onu, k, "classical")["upstream_mbits"])
+        ups_s.append(round_times(cfg, rng, sel, onu, k, "sfl")["upstream_mbits"])
+    assert ups_c[2] / ups_c[0] == pytest.approx(4.0)
+    assert max(ups_s) <= cfg.n_onus * cfg.model_mbits + 1e-6
+    # paper's headline numbers: 87.5% saving at N=128 with 16 ONUs
+    saving = 1 - ups_s[2] / ups_c[2]
+    assert saving == pytest.approx(0.875, abs=0.01)
+
+
+def test_involved_clients_fig2b():
+    """Classical involvement is slice-capacity-bound (paper: 1..20, flat in
+    N); SFL involves the large majority of the selected clients."""
+    cfg, rng, onu, k = _setup()
+    for N in (48, 128):
+        inv_c, inv_s = [], []
+        for _ in range(10):
+            sel = rng.choice(cfg.n_clients, N, replace=False)
+            inv_c.append(round_times(cfg, rng, sel, onu, k, "classical")["involved"].sum())
+            inv_s.append(round_times(cfg, rng, sel, onu, k, "sfl")["involved"].sum())
+        assert 1 <= np.mean(inv_c) <= 20, (N, np.mean(inv_c))
+        assert np.mean(inv_s) >= 0.7 * N, (N, np.mean(inv_s))
+
+
+def test_classical_involved_independent_of_n():
+    cfg, rng, onu, k = _setup()
+    means = []
+    for N in (48, 128):
+        inv = [round_times(cfg, rng, rng.choice(cfg.n_clients, N, replace=False),
+                           onu, k, "classical")["involved"].sum()
+               for _ in range(10)]
+        means.append(np.mean(inv))
+    assert abs(means[0] - means[1]) < 5.0
+
+
+def test_train_times_band():
+    """T^r lands in the paper's [3, 20] s band, monotone in |D|."""
+    k = np.array([10, 100, 400])
+    t = train_times(k)
+    assert t[0] == pytest.approx(3.0) and t[2] == pytest.approx(20.0)
+    assert np.all(np.diff(t) > 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30), n=st.integers(8, 128))
+def test_deadline_monotone_in_bandwidth(seed, n):
+    """More slice bandwidth never hurts involvement (both modes)."""
+    rng0 = np.random.default_rng(seed)
+    onu = np.arange(320) // 20
+    k = rng0.integers(50, 400, 320)
+    sel = rng0.choice(320, n, replace=False)
+    for mode in ("classical", "sfl"):
+        inv = []
+        for mbps in (50.0, 100.0, 400.0):
+            cfg = PonConfig(slice_mbps=mbps)
+            rt = round_times(cfg, np.random.default_rng(seed + 1), sel, onu, k, mode)
+            inv.append(rt["involved"].sum())
+        assert inv[0] <= inv[1] + 1e-6 <= inv[2] + 2e-6
+
+
+def test_straggler_exclusion():
+    """Every involved client's completion is within the threshold."""
+    cfg, rng, onu, k = _setup()
+    sel = rng.choice(cfg.n_clients, 64, replace=False)
+    for mode in ("classical", "sfl"):
+        rt = round_times(cfg, rng, sel, onu, k, mode)
+        done = rt["t_done"][rt["involved"] > 0]
+        assert np.all(done <= cfg.sync_threshold_s + 1e-9)
+
+
+def test_sfl_strict_queueing_still_beats_classical():
+    cfg = PonConfig(sfl_queueing=True)
+    rng = np.random.default_rng(1)
+    onu = np.arange(cfg.n_clients) // cfg.clients_per_onu
+    k = rng.integers(50, 400, cfg.n_clients)
+    sel = rng.choice(cfg.n_clients, 128, replace=False)
+    inv_s = round_times(cfg, rng, sel, onu, k, "sfl")["involved"].sum()
+    inv_c = round_times(cfg, rng, sel, onu, k, "classical")["involved"].sum()
+    assert inv_s > inv_c
