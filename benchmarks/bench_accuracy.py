@@ -8,6 +8,7 @@ Reduced CNN by default (CPU: ~1 s/round); --full uses the exact LEAF CNN.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -19,7 +20,7 @@ from repro.core import fedavg, selection
 from repro.core.fedavg import FLConfig
 from repro.data import femnist
 from repro.models import femnist_cnn
-from repro.pon import PonConfig, round_times
+from repro.pon import PonConfig
 
 
 def _loss(params, batch):
@@ -27,10 +28,14 @@ def _loss(params, batch):
 
 
 def run(n_rounds: int = 30, n_selected: int = 128, full: bool = False,
-        seed: int = 0, modes=("classical", "sfl")):
+        seed: int = 0, modes=("classical", "sfl"), pon: PonConfig = None):
     cfg = configs.get("femnist_cnn") if full else configs.get("femnist_cnn").reduced()
-    fl = FLConfig(n_selected=n_selected, local_steps=8, local_lr=0.06)
-    pon = PonConfig()
+    # FLConfig owns the FL topology — adopt the one requested via pon so
+    # --onus/--clients-per-onu on the CLIs are honored, not overridden
+    topo = {} if pon is None else {"n_onus": pon.n_onus,
+                                   "clients_per_onu": pon.clients_per_onu}
+    fl = FLConfig(n_selected=n_selected, local_steps=8, local_lr=0.06,
+                  pon=pon, **topo)
     data_cfg = femnist.FemnistConfig(n_clients=fl.n_clients, seed=seed + 7)
     clients, eval_set = femnist.generate(data_cfg)
     eval_batch = jax.tree.map(jnp.asarray, eval_set)
@@ -42,9 +47,10 @@ def run(n_rounds: int = 30, n_selected: int = 128, full: bool = False,
         rng = np.random.default_rng(seed)
         params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(seed))
         accs, involved_hist = [], []
+        fl_mode = dataclasses.replace(fl, mode=mode)
         for rnd in range(n_rounds):
             sel = selection.select_clients(rng, fl.n_clients, fl.n_selected)
-            rt = round_times(pon, rng, sel, onu, counts, mode)
+            rt = fedavg.round_transport(fl_mode, rng, sel, counts, onu)
             mask = rt["involved"]
             involved_hist.append(float(mask.sum()))
             # only involved clients' updates count — skip training the rest

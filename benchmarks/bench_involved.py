@@ -1,18 +1,27 @@
-"""Fig. 2b: involved clients per round under the 25 s deadline."""
+"""Fig. 2b: involved clients per round under the 25 s deadline.
+
+Accepts any event-simulator transport (``--dba``, ``--wavelengths``,
+``--bg-load``); defaults reproduce the paper's fixed slice.
+"""
 from __future__ import annotations
+
+import argparse
+from typing import Optional
 
 import numpy as np
 
-from repro.pon import PonConfig, round_times
+from repro.pon import (PonConfig, add_pon_cli_args, pon_config_from_args,
+                       round_times)
 
 
-def run(rounds: int = 30, seed: int = 0):
-    cfg = PonConfig()
+def run(rounds: int = 30, seed: int = 0, pon: Optional[PonConfig] = None):
+    cfg = pon if pon is not None else PonConfig()
     rng = np.random.default_rng(seed)
     onu = np.arange(cfg.n_clients) // cfg.clients_per_onu
     counts = rng.integers(50, 400, cfg.n_clients).astype(np.float32)
     rows = []
-    for N in (48, 128):
+    # clamp the paper's sweep to the configured population
+    for N in (n for n in (48, 128) if n <= cfg.n_clients):
         inv = {"classical": [], "sfl": []}
         for _ in range(rounds):
             sel = rng.choice(cfg.n_clients, N, replace=False)
@@ -30,10 +39,16 @@ def run(rounds: int = 30, seed: int = 0):
     return rows
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--seed", type=int, default=0)
+    add_pon_cli_args(ap)
+    args = ap.parse_args(argv)
+    pon = pon_config_from_args(args)
     print("bench_involved (Fig 2b)")
     print("N,classical_mean,classical_min,classical_max,sfl_mean,sfl_frac")
-    for r in run():
+    for r in run(rounds=args.rounds, seed=args.seed, pon=pon):
         print(f"{r['N']},{r['classical_mean']:.1f},{r['classical_min']:.0f},"
               f"{r['classical_max']:.0f},{r['sfl_mean']:.1f},{r['sfl_frac']:.2f}")
     print("# paper check: classical fluctuates in [1,20] independent of N; "

@@ -5,6 +5,7 @@
   upstream  — Fig. 2a (upstream Mb per round vs N)
   involved  — Fig. 2b (involved clients under the 25 s deadline)
   accuracy  — Fig. 2c (FedAvg accuracy, SFL vs classical)
+  dba       — DBA policy × wavelengths × background-load sweep (beyond-paper)
   kernels   — ONU-AF / quantize micro-bench
   report    — EXPERIMENTS tables from results/dryrun/*.json (if present)
 """
@@ -17,17 +18,18 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="upstream|involved|accuracy|kernels|report")
+                    help="upstream|involved|accuracy|dba|kernels|report")
     ap.add_argument("--full", action="store_true",
                     help="accuracy bench with the full LEAF CNN (slow)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_involved, bench_kernels,
-                            bench_upstream, report)
+    from benchmarks import (bench_accuracy, bench_dba, bench_involved,
+                            bench_kernels, bench_upstream, report)
 
     benches = {
-        "upstream": bench_upstream.main,
-        "involved": bench_involved.main,
+        "upstream": lambda: bench_upstream.main([]),
+        "involved": lambda: bench_involved.main([]),
+        "dba": lambda: bench_dba.main([]),
         "kernels": bench_kernels.main,
         "accuracy": bench_accuracy.main,
     }

@@ -10,6 +10,7 @@ import argparse
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
@@ -20,11 +21,15 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="exact LEAF CNN (26.4 MB updates); default reduced")
     ap.add_argument("--seed", type=int, default=0)
+    # event-simulator transport (defaults = the paper's fixed slice)
+    from repro.pon import add_pon_cli_args, pon_config_from_args
+    add_pon_cli_args(ap)
     args = ap.parse_args()
 
     from benchmarks import bench_accuracy
     res = bench_accuracy.run(n_rounds=args.rounds, n_selected=args.n_selected,
-                             full=args.full, seed=args.seed)
+                             full=args.full, seed=args.seed,
+                             pon=pon_config_from_args(args))
     print("round,classical_acc,sfl_acc,classical_involved,sfl_involved")
     for i in range(args.rounds):
         print(f"{i},{res['classical']['accs'][i]:.4f},{res['sfl']['accs'][i]:.4f},"

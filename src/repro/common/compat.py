@@ -1,0 +1,45 @@
+"""Cross-version jax shims.
+
+The codebase targets the jax >= 0.8 public API (``jax.shard_map`` with
+``axis_names``/``check_vma``); older toolchains only ship
+``jax.experimental.shard_map.shard_map`` with the pre-rename kwargs
+(``check_rep``, and partial-manual expressed as the complementary ``auto``
+set). ``shard_map`` here presents the new-API surface on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on any jax version.
+
+    Older jax returns a one-element list of per-device dicts; newer jax
+    returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
+    """``jax.shard_map`` with new-API kwargs on any supported jax version."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

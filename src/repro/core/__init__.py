@@ -1,3 +1,4 @@
 from repro.core import aggregation, fedavg, selection, compression
+from repro.core.fedavg import FLConfig
 
-__all__ = ["aggregation", "fedavg", "selection", "compression"]
+__all__ = ["aggregation", "fedavg", "selection", "compression", "FLConfig"]

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
+from repro.pon import PonConfig, round_times
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,15 +33,51 @@ class FLConfig:
     sync_threshold_s: float = 25.0  # the paper's deadline
     seed: int = 0
     client_chunk: int = 16          # vmap chunking (host-memory bound)
+    # transport: None = the paper's fixed-slice defaults; set to any
+    # PonConfig to pick the event simulator's (dba, wavelengths,
+    # background traffic, link rates) combination. FLConfig stays the
+    # single source of truth for the FL topology and deadline — those
+    # fields of an explicit ``pon`` are overridden (see pon_config).
+    pon: Optional[PonConfig] = None
 
     @property
     def n_clients(self) -> int:
         return self.n_onus * self.clients_per_onu
 
+    def pon_config(self) -> PonConfig:
+        """The PON transport config for this run.
+
+        Transport knobs (dba, wavelengths, traffic, rates) come from
+        ``self.pon``; topology (n_onus, clients_per_onu) and the deadline
+        always come from this FLConfig, so the client→ONU map handed to
+        the simulator can never disagree with the simulated tree.
+        """
+        base = self.pon if self.pon is not None else PonConfig()
+        return dataclasses.replace(base,
+                                   n_onus=self.n_onus,
+                                   clients_per_onu=self.clients_per_onu,
+                                   sync_threshold_s=self.sync_threshold_s)
+
 
 def onu_of_client(fl: FLConfig) -> np.ndarray:
     """Static topology: client c hangs off ONU c // clients_per_onu."""
     return np.arange(fl.n_clients) // fl.clients_per_onu
+
+
+def round_transport(fl: FLConfig, rng: np.random.Generator,
+                    selected: np.ndarray, sample_counts: np.ndarray,
+                    onu_ids: Optional[np.ndarray] = None) -> Dict[str, Any]:
+    """One round of the PON transport under ``fl``'s config path.
+
+    Returns the ``round_times`` dict (completion times, involvement mask,
+    upstream Mbits, event-simulator stats); the mask is what ``apply_round``
+    expects. This is the single seam between the learning engine and the
+    network simulator.
+    """
+    if onu_ids is None:
+        onu_ids = onu_of_client(fl)
+    return round_times(fl.pon_config(), rng, selected, onu_ids,
+                       sample_counts, fl.mode)
 
 
 def local_sgd(params, batches: Dict[str, jax.Array], loss_fn: Callable,

@@ -146,8 +146,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
                                     transport=transport)
         lowered = jax.jit(fn).lower(*args)
         compiled = lowered.compile()
+    from repro.common.compat import cost_analysis
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis(compiled)
     rec["compile_s"] = round(time.time() - t0, 2)
     rec["memory"] = {
         "argument_gb": ma.argument_size_in_bytes / 1e9,

@@ -266,7 +266,8 @@ def make_train_step(cfg: ModelConfig, rules: ShardingRules, opt_name: str = "ada
             bspecs = jax.tree.map(lambda _: P("pod"), batch)
             pspecs = jax.tree.map(lambda _: P(), params)
             ospecs = jax.tree.map(lambda _: P(), opt_state)
-            fn = jax.shard_map(
+            from repro.common.compat import shard_map
+            fn = shard_map(
                 pod_body, mesh=mesh,
                 in_specs=(pspecs, ospecs, bspecs, P()),
                 out_specs=(pspecs, ospecs, P()),

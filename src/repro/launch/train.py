@@ -33,7 +33,7 @@ from repro.launch import specs as S
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
 from repro.models.config import ShapeConfig
-from repro.pon import PonConfig, round_times
+from repro.pon import add_pon_cli_args, pon_config_from_args, round_times
 
 
 def build_rules(mesh, mode: str) -> ShardingRules:
@@ -55,6 +55,9 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--opt", default="adamw")
     ap.add_argument("--mode", default="sfl", choices=["sfl", "classical"])
+    # PON transport: the event simulator's (dba, wavelengths, traffic,
+    # topology) config path — defaults reproduce the paper's fixed slice
+    add_pon_cli_args(ap)
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -69,7 +72,7 @@ def main():
     shp = ShapeConfig("cli", args.seq, args.batch, "train")
 
     rng = np.random.default_rng(args.seed)
-    pon = PonConfig()
+    pon = pon_config_from_args(args)
     onu_ids = np.arange(pon.n_clients) // pon.clients_per_onu
     sample_counts = rng.integers(50, 400, pon.n_clients).astype(np.float32)
 
@@ -92,7 +95,7 @@ def main():
         for step in range(step0, args.steps):
             # --- the paper's per-round client machinery ---
             sel = selection.select_clients(rng, pon.n_clients, args.batch)
-            rt = round_times(PonConfig(), rng, sel, onu_ids, sample_counts,
+            rt = round_times(pon, rng, sel, onu_ids, sample_counts,
                              args.mode)
             weights = sample_counts[sel] * rt["involved"]
             batch_np = next(lm_data.lm_batches(

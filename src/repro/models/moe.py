@@ -156,7 +156,8 @@ def _combine_manual(yd_flat, dst, wts, EC: int, rules: ShardingRules):
             out = out + g * (w_l[..., kk] * valid[..., kk].astype(w_l.dtype))[..., None]
         return jax.lax.psum(out, axis)
 
-    return jax.shard_map(
+    from repro.common.compat import shard_map
+    return shard_map(
         body,
         mesh=phys,
         in_specs=(P(None, axis, None), P(), P()),

@@ -1,13 +1,34 @@
 from repro.pon.timing import (
     PonConfig,
+    add_pon_cli_args,
+    pon_config_from_args,
     round_times,
+    round_times_fifo,
     train_times,
     MODEL_UPDATE_MBITS,
     SLICE_MBPS,
     SYNC_THRESHOLD_S,
 )
+from repro.pon.topology import Onu, Topology, Wavelength
+from repro.pon.dba import (
+    DBA_POLICIES,
+    DbaPolicy,
+    FifoDba,
+    FlPriorityDba,
+    IpactDba,
+    TdmaDba,
+    make_dba,
+)
+from repro.pon.traffic import BackgroundTraffic
+from repro.pon.events import UpstreamJob, simulate_round, simulate_upstream
 
 __all__ = [
-    "PonConfig", "round_times", "train_times",
+    "PonConfig", "add_pon_cli_args", "pon_config_from_args",
+    "round_times", "round_times_fifo", "train_times",
     "MODEL_UPDATE_MBITS", "SLICE_MBPS", "SYNC_THRESHOLD_S",
+    "Onu", "Topology", "Wavelength",
+    "DBA_POLICIES", "DbaPolicy", "FifoDba", "FlPriorityDba", "IpactDba",
+    "TdmaDba", "make_dba",
+    "BackgroundTraffic",
+    "UpstreamJob", "simulate_round", "simulate_upstream",
 ]

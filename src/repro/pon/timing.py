@@ -52,7 +52,14 @@ class PonConfig:
     sync_threshold_s: float = SYNC_THRESHOLD_S
     downlink_s: float = DOWNLINK_S
     onu_agg_s: float = ONU_AGG_S
-    sfl_queueing: bool = False      # True = strict FIFO for θ uploads
+    sfl_queueing: bool = False      # True = θ uploads queue through the DBA
+    # --- event-simulator knobs (events.py); the defaults reproduce the
+    # paper's fixed-slice FIFO model bit for bit ---
+    n_wavelengths: int = 1          # TWDM upstream wavelengths
+    dba: str = "fifo"               # grant policy (see pon/dba.py)
+    background_load: float = 0.0    # offered bg load ÷ total capacity
+    bg_burst_mbits: float = 5.0     # mean background burst size
+    onu_link_mbps: Optional[float] = None   # per-ONU drop-link cap
 
     @property
     def n_clients(self) -> int:
@@ -61,6 +68,34 @@ class PonConfig:
     @property
     def upload_s(self) -> float:
         return self.model_mbits / self.slice_mbps
+
+
+def add_pon_cli_args(ap) -> None:
+    """Attach the event-simulator transport flags to an argparse parser.
+
+    One definition shared by launch/train.py, the benchmarks, and the
+    examples so the flag set and defaults can't drift; the defaults are
+    read off PonConfig itself.
+    """
+    d = PonConfig()
+    ap.add_argument("--dba", default=d.dba,
+                    help="grant scheduler: fifo|tdma|ipact|fl_priority")
+    ap.add_argument("--wavelengths", type=int, default=d.n_wavelengths,
+                    help="TWDM upstream wavelength count")
+    ap.add_argument("--bg-load", type=float, default=d.background_load,
+                    help="background upstream load ÷ total PON capacity")
+    ap.add_argument("--onus", type=int, default=d.n_onus)
+    ap.add_argument("--clients-per-onu", type=int, default=d.clients_per_onu)
+    ap.add_argument("--sfl-queueing", action="store_true",
+                    help="θ uploads queue through the DBA (strict)")
+
+
+def pon_config_from_args(args) -> PonConfig:
+    """Build the PonConfig selected by ``add_pon_cli_args`` flags."""
+    return PonConfig(n_onus=args.onus, clients_per_onu=args.clients_per_onu,
+                     dba=args.dba, n_wavelengths=args.wavelengths,
+                     background_load=args.bg_load,
+                     sfl_queueing=args.sfl_queueing)
 
 
 def train_times(sample_counts: np.ndarray) -> np.ndarray:
@@ -75,6 +110,25 @@ def round_times(cfg: PonConfig, rng: np.random.Generator,
                 selected: np.ndarray, onu_ids: np.ndarray,
                 sample_counts: np.ndarray, mode: str) -> Dict[str, np.ndarray]:
     """Simulate one round; returns per-selected-client completion/involvement.
+
+    Thin compatibility wrapper over the event-driven simulator
+    (``repro.pon.events.simulate_round``): the ``cfg`` knobs select the DBA
+    policy, TWDM wavelength count, and background load. Under the seed
+    defaults (one wavelength, ``fifo`` grants, zero background load) the
+    result is bit-for-bit identical to the closed-form FIFO recurrence kept
+    below as :func:`round_times_fifo` — the regression oracle, pinned by
+    ``tests/test_pon_sim.py::test_event_sim_matches_closed_form``.
+    """
+    from repro.pon import events
+    return events.simulate_round(cfg, rng, selected, onu_ids, sample_counts,
+                                 mode)
+
+
+def round_times_fifo(cfg: PonConfig, rng: np.random.Generator,
+                     selected: np.ndarray, onu_ids: np.ndarray,
+                     sample_counts: np.ndarray, mode: str,
+                     ) -> Dict[str, np.ndarray]:
+    """Closed-form FIFO oracle (the paper's fixed 100 Mb/s slice model).
 
     mode='classical': every selected client's full model crosses the shared
     upstream slice, serialized FIFO in arrival (DBA grant) order.
@@ -117,7 +171,8 @@ def round_times(cfg: PonConfig, rng: np.random.Generator,
             theta_done[active] = theta_ready[active] + up
         t_done = np.where(in_time, theta_done[onus], np.inf)
         involved = t_done <= cfg.sync_threshold_s
-        upstream_mbits = float(len(np.unique(onus))) * cfg.model_mbits
+        # only ONUs that actually transmit a θ consume upstream
+        upstream_mbits = float(len(active)) * cfg.model_mbits
 
     return {
         "ready": ready,

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional dev dep
 
 from repro.core import aggregation as agg
 
@@ -82,7 +82,13 @@ _SPMD_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map  # jax >= 0.8
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    import inspect
+    _CK = ("check_vma" if "check_vma" in inspect.signature(shard_map).parameters
+           else "check_rep")  # kwarg renamed across jax versions
     from repro.core import aggregation as agg
     from repro.launch.mesh import make_test_mesh
 
@@ -102,7 +108,7 @@ _SPMD_SCRIPT = textwrap.dedent("""
     for mode in ("two_step", "classical"):
         fn = shard_map(lambda xs, ws: worker(xs, ws, mode), mesh=mesh,
                        in_specs=(P(("pod", "data")), P(("pod", "data"))),
-                       out_specs=(P(), P()), check_vma=False)
+                       out_specs=(P(), P()), **{_CK: False})
         m, K = jax.jit(fn)(x, w)
         outs[mode] = (np.asarray(m), float(K))
     want, Kw = agg.numpy_weighted_mean(np.asarray(x), np.asarray(w), np.ones(C))
@@ -112,7 +118,7 @@ _SPMD_SCRIPT = textwrap.dedent("""
     # int8-compressed cross-pod hop: unbiased, so close but not exact
     fn = shard_map(lambda xs, ws: worker(xs, ws, "two_step"), mesh=mesh,
                    in_specs=(P(("pod", "data")), P(("pod", "data"))),
-                   out_specs=(P(), P()), check_vma=False)
+                   out_specs=(P(), P()), **{_CK: False})
     print("SPMD_AGG_OK")
 """)
 

@@ -1,0 +1,264 @@
+"""Event-driven PON simulator: oracle equivalence, DBA invariants, traffic."""
+import numpy as np
+import pytest
+
+from repro.pon import (
+    BackgroundTraffic,
+    Onu,
+    PonConfig,
+    Topology,
+    UpstreamJob,
+    Wavelength,
+    make_dba,
+    round_times,
+    round_times_fifo,
+    simulate_upstream,
+)
+
+
+def _setup(seed=0, n_clients=320, clients_per_onu=20):
+    rng = np.random.default_rng(seed)
+    onu = np.arange(n_clients) // clients_per_onu
+    k = rng.integers(50, 400, n_clients)
+    return onu, k
+
+
+# ----------------------------------------------------- oracle equivalence
+@pytest.mark.parametrize("mode", ["classical", "sfl"])
+@pytest.mark.parametrize("queueing", [False, True])
+@pytest.mark.parametrize("seed", [0, 1, 17])
+def test_event_sim_matches_closed_form(mode, queueing, seed):
+    """(1 wavelength, fixed/fifo grants, no bg) == closed-form FIFO, bit
+    for bit — round_times is a wrapper, round_times_fifo the oracle."""
+    cfg = PonConfig(sfl_queueing=queueing)
+    onu, k = _setup(3)
+    sel = np.random.default_rng(seed + 99).choice(cfg.n_clients, 64,
+                                                  replace=False)
+    a = round_times_fifo(cfg, np.random.default_rng(seed), sel, onu, k, mode)
+    b = round_times(cfg, np.random.default_rng(seed), sel, onu, k, mode)
+    for key in ("ready", "t_done", "involved"):
+        assert a[key].dtype == b[key].dtype
+        assert np.array_equal(a[key], b[key]), key   # exact, inf-aware
+    assert a["upstream_mbits"] == b["upstream_mbits"]
+    assert a["upload_s"] == b["upload_s"]
+
+
+def test_wrapper_preserves_rng_stream():
+    """round_times consumes exactly the closed form's draws (zero bg load),
+    so downstream seeded code sees identical RNG state."""
+    cfg = PonConfig()
+    onu, k = _setup()
+    sel = np.arange(48)
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    round_times_fifo(cfg, r1, sel, onu, k, "classical")
+    round_times(cfg, r2, sel, onu, k, "classical")
+    assert r1.integers(0, 1 << 30) == r2.integers(0, 1 << 30)
+
+
+# ------------------------------------------------- DBA grant-order invariants
+def _jobs(specs):
+    """specs: (onu, size, ready[, kind]) tuples → UpstreamJobs."""
+    return [UpstreamJob(seq=i, onu=s[0], size_mbits=s[1], ready_s=s[2],
+                        kind=(s[3] if len(s) > 3 else "fl"))
+            for i, s in enumerate(specs)]
+
+
+def _grant_order(jobs, topo, dba_name):
+    simulate_upstream(jobs, topo, make_dba(dba_name))
+    served = [j for j in jobs if j.grant_idx >= 0]
+    return [j.seq for j in sorted(served, key=lambda j: j.grant_idx)]
+
+
+def test_fifo_serves_in_arrival_order():
+    topo = Topology.uniform(n_onus=4, n_wavelengths=1)
+    jobs = _jobs([(3, 10.0, 5.0), (0, 10.0, 1.0), (1, 10.0, 3.0),
+                  (2, 10.0, 1.0)])
+    # (ready, seq) order: seq1(t=1), seq3(t=1), seq2(t=3), seq0(t=5)
+    assert _grant_order(jobs, topo, "fifo") == [1, 3, 2, 0]
+
+
+def test_tdma_cycles_through_onus_in_id_order():
+    topo = Topology.uniform(n_onus=4, n_wavelengths=1)
+    # two jobs per ONU, all ready at t=0, listed in scrambled order
+    jobs = _jobs([(o, 10.0, 0.0) for o in (2, 0, 3, 1, 2, 0, 3, 1)])
+    order = _grant_order(jobs, topo, "tdma")
+    onus = [jobs[s].onu for s in order]
+    # one grant per ONU per cycle, ONU ids ascending within each cycle
+    assert onus == [0, 1, 2, 3, 0, 1, 2, 3]
+
+
+def test_ipact_grants_largest_backlog_first():
+    topo = Topology.uniform(n_onus=3, n_wavelengths=1)
+    # ONU 0 reports 3 queued jobs, ONU 1 reports one — 0 drains first even
+    # though ONU 1's job arrived earlier
+    jobs = _jobs([(1, 10.0, 0.0), (0, 10.0, 0.5), (0, 10.0, 0.5),
+                  (0, 10.0, 0.5)])
+    order = _grant_order(jobs, topo, "ipact")
+    assert order[0] == 0                   # only ONU 1 pending at t=0
+    assert [jobs[s].onu for s in order[1:]] == [0, 0, 0]
+
+
+def test_fl_priority_grants_theta_before_fl_before_bg():
+    topo = Topology.uniform(n_onus=4, n_wavelengths=1)
+    jobs = _jobs([(0, 10.0, 0.0, "bg"), (1, 10.0, 0.0, "fl"),
+                  (2, 10.0, 0.0, "theta"), (3, 10.0, 0.0, "bg")])
+    # the t=0 grant goes to whatever is pending first; from then on the
+    # full queue is visible and strict priority decides
+    order = _grant_order(jobs, topo, "fl_priority")
+    kinds = [jobs[s].kind for s in order]
+    assert kinds.index("theta") < kinds.index("fl") < max(
+        i for i, kd in enumerate(kinds) if kd == "bg")
+
+
+def test_one_transmitter_per_onu():
+    """An ONU never transmits on two wavelengths at once."""
+    topo = Topology.uniform(n_onus=2, n_wavelengths=4)
+    jobs = _jobs([(0, 10.0, 0.0) for _ in range(6)])
+    simulate_upstream(jobs, topo, make_dba("fifo"))
+    spans = sorted((j.start_s, j.done_s) for j in jobs)
+    for (s1, d1), (s2, _) in zip(spans, spans[1:]):
+        assert s2 >= d1 - 1e-12            # serialized despite 4 channels
+
+
+def test_unreachable_wavelength_starves_job():
+    # ONU 1's transmitter reaches no wavelength
+    topo = Topology(onus=(Onu(0, 1), Onu(1, 1, wavelengths=())),
+                    wavelengths=(Wavelength(0, 100.0),))
+    jobs = _jobs([(0, 10.0, 0.0), (1, 10.0, 0.0)])
+    simulate_upstream(jobs, topo, make_dba("fifo"))
+    assert np.isfinite(jobs[0].done_s) and np.isinf(jobs[1].done_s)
+
+
+# ------------------------------------------------------- wavelengths & rates
+def test_more_wavelengths_never_hurt_involvement():
+    onu, k = _setup()
+    sel = np.random.default_rng(7).choice(320, 96, replace=False)
+    inv = []
+    for w in (1, 2, 4):
+        cfg = PonConfig(n_wavelengths=w)
+        rt = round_times(cfg, np.random.default_rng(5), sel, onu, k,
+                         "classical")
+        inv.append(rt["involved"].sum())
+    assert inv[0] < inv[2]                 # parallelism lifts the cap
+    assert inv[0] <= inv[1] <= inv[2]
+
+
+def test_onu_link_cap_slows_upload():
+    topo = Topology.uniform(n_onus=2, n_wavelengths=1, rate_mbps=100.0,
+                            onu_link_mbps=50.0)
+    jobs = _jobs([(0, 100.0, 0.0)])
+    simulate_upstream(jobs, topo, make_dba("fifo"))
+    assert jobs[0].done_s == pytest.approx(2.0)    # 100 Mb at min(100,50)
+
+
+def test_skewed_topology_client_map():
+    topo = Topology.skewed([3, 0, 5])
+    assert topo.n_clients == 8
+    assert topo.onu_of_client().tolist() == [0, 0, 0, 2, 2, 2, 2, 2]
+
+
+def test_topology_rejects_mispositioned_ids():
+    """Ids double as positional indices; a mismatched tree must not be
+    silently mis-simulated."""
+    with pytest.raises(ValueError, match="ids must equal positions"):
+        Topology(onus=(Onu(1, 4),), wavelengths=(Wavelength(0, 100.0),))
+    with pytest.raises(ValueError, match="ids must equal positions"):
+        Topology(onus=(Onu(0, 4),), wavelengths=(Wavelength(1, 100.0),))
+
+
+# --------------------------------------------------------- background traffic
+def test_background_traffic_load_calibration():
+    topo = Topology.uniform(n_onus=16, n_wavelengths=1, rate_mbps=100.0)
+    tr = BackgroundTraffic(load=0.5, burst_mbits=5.0)
+    horizon = 2000.0
+    jobs = tr.jobs(np.random.default_rng(0), topo, horizon)
+    offered = sum(j.size_mbits for j in jobs)
+    assert offered / (100.0 * horizon) == pytest.approx(0.5, rel=0.1)
+
+
+def test_background_starves_fl_and_priority_protects():
+    """Heavy bg load collapses involvement under fifo; the FL-aware
+    priority scheduler restores the clean-slice numbers."""
+    onu, k = _setup()
+    sel = np.random.default_rng(7).choice(320, 96, replace=False)
+
+    def inv(cfg):
+        return round_times(cfg, np.random.default_rng(5), sel, onu, k,
+                           "classical")["involved"].sum()
+
+    clean = inv(PonConfig())
+    starved = inv(PonConfig(background_load=2.0))
+    guarded = inv(PonConfig(background_load=2.0, dba="fl_priority"))
+    assert starved < clean
+    assert guarded >= clean                # non-preemptive ≥, typically ==
+
+
+def test_sfl_interleaved_thetas_immune_to_background():
+    """Paper-consistent mode: θ grants are interleaved, so bg load cannot
+    change completion times (it only shows in the stats)."""
+    onu, k = _setup()
+    sel = np.random.default_rng(7).choice(320, 96, replace=False)
+    a = round_times(PonConfig(), np.random.default_rng(5), sel, onu, k, "sfl")
+    b = round_times(PonConfig(background_load=1.0), np.random.default_rng(5),
+                    sel, onu, k, "sfl")
+    assert np.array_equal(a["t_done"], b["t_done"])
+    assert b["bg_mbits_offered"] > 0.0
+
+
+def test_sfl_queueing_with_background_degrades():
+    onu, k = _setup()
+    sel = np.random.default_rng(7).choice(320, 96, replace=False)
+    a = round_times(PonConfig(sfl_queueing=True), np.random.default_rng(5),
+                    sel, onu, k, "sfl")
+    b = round_times(PonConfig(sfl_queueing=True, background_load=2.0),
+                    np.random.default_rng(5), sel, onu, k, "sfl")
+    assert b["involved"].sum() < a["involved"].sum()
+
+
+def test_sfl_upstream_counts_only_transmitting_onus():
+    """An ONU whose clients all miss the cutoff sends no θ — and no bytes."""
+    cfg = PonConfig(sync_threshold_s=3.0)   # cutoff < min ready: no θ at all
+    onu, k = _setup()
+    sel = np.arange(4)                       # 4 clients, all on ONU 0
+    rt = round_times(cfg, np.random.default_rng(0), sel, onu, k, "sfl")
+    assert rt["involved"].sum() == 0
+    assert rt["upstream_mbits"] == 0.0
+
+
+# ------------------------------------------------------------ config plumbing
+def test_flconfig_topology_overrides_pon():
+    """FLConfig owns topology/deadline; an explicit pon only brings the
+    transport knobs — the client→ONU map can never disagree with the tree."""
+    from repro.core import FLConfig
+    from repro.core.fedavg import round_transport
+
+    fl = FLConfig(n_onus=32, clients_per_onu=10, mode="classical",
+                  pon=PonConfig(dba="tdma", n_wavelengths=2))
+    pcfg = fl.pon_config()
+    assert (pcfg.n_onus, pcfg.clients_per_onu) == (32, 10)
+    assert (pcfg.dba, pcfg.n_wavelengths) == ("tdma", 2)
+    counts = np.random.default_rng(1).integers(50, 400,
+                                               fl.n_clients).astype(np.float32)
+    sel = np.random.default_rng(2).choice(fl.n_clients, 48, replace=False)
+    rt = round_transport(fl, np.random.default_rng(0), sel, counts)
+    assert rt["involved"].shape == (48,)     # no ONU-index crash
+
+
+def test_flconfig_pon_path():
+    from repro.core import FLConfig
+    from repro.core.fedavg import round_transport
+
+    fl = FLConfig(mode="classical",
+                  pon=PonConfig(n_wavelengths=2, dba="fl_priority"))
+    rng = np.random.default_rng(0)
+    counts = np.random.default_rng(1).integers(50, 400,
+                                               fl.n_clients).astype(np.float32)
+    sel = np.random.default_rng(2).choice(fl.n_clients, 48, replace=False)
+    rt = round_transport(fl, rng, sel, counts)
+    assert rt["dba"] == "fl_priority" and rt["n_wavelengths"] == 2
+    assert rt["involved"].shape == (48,)
+
+
+def test_unknown_dba_raises():
+    with pytest.raises(ValueError, match="unknown DBA"):
+        make_dba("wfq")

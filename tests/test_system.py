@@ -12,6 +12,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 REPO = os.path.join(os.path.dirname(__file__), "..")
 
@@ -136,6 +137,9 @@ def test_dryrun_small_mesh_subprocess():
     assert "DRYRUN_OK" in out
 
 
+@pytest.mark.skipif(not hasattr(jax, "shard_map"),
+                    reason="old jaxlib: pre-0.8 XLA emits a collective HLO "
+                           "format the roofline parser does not cost")
 def test_sfl_vs_classical_cross_pod_traffic():
     """THE paper claim, on collectives: the SFL (FSDP two-step) schedule
     moves fewer cross-pod bytes than the classical flat all-reduce."""
