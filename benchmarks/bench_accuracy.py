@@ -4,19 +4,23 @@ Both run the SAME FedAvg math; the classical benchmark involves only the
 clients that beat the deadline on the serialized slice (O(10)/round) while
 SFL involves nearly all selected — the accuracy gap is the paper's point.
 
+Runs through the ``repro.fl`` RoundLoop: any registered strategy is
+selectable (``--strategy fedprox|fedopt|…``), and the fault-tolerance knobs
+(``--overselect``, ``--p-crash``, ``--p-transient``) flow through the
+loop's mask path. Under the defaults the trajectory is bit-for-bit the
+pre-refactor hand-rolled loop (pinned by tests/test_fl.py).
+
 Reduced CNN by default (CPU: ~1 s/round); --full uses the exact LEAF CNN.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.core import fedavg, selection
+from repro import configs, fl
 from repro.core.fedavg import FLConfig
 from repro.data import femnist
 from repro.models import femnist_cnn
@@ -28,78 +32,116 @@ def _loss(params, batch):
 
 
 def run(n_rounds: int = 30, n_selected: int = 128, full: bool = False,
-        seed: int = 0, modes=("classical", "sfl"), pon: PonConfig = None):
+        seed: int = 0, modes=("classical", "sfl"), pon: PonConfig = None,
+        overselect: float = 0.0, p_crash: float = 0.0,
+        p_transient: float = 0.0, strategy_kwargs=None):
+    """Run each strategy in ``modes`` through the RoundLoop; returns
+    {mode: {"accs": [...], "involved": [...]}}."""
     cfg = configs.get("femnist_cnn") if full else configs.get("femnist_cnn").reduced()
     # FLConfig owns the FL topology — adopt the one requested via pon so
     # --onus/--clients-per-onu on the CLIs are honored, not overridden
     topo = {} if pon is None else {"n_onus": pon.n_onus,
                                    "clients_per_onu": pon.clients_per_onu}
-    fl = FLConfig(n_selected=n_selected, local_steps=8, local_lr=0.06,
-                  pon=pon, **topo)
-    data_cfg = femnist.FemnistConfig(n_clients=fl.n_clients, seed=seed + 7)
+    flc = FLConfig(n_selected=n_selected, local_steps=8, local_lr=0.06,
+                   pon=pon, **topo)
+    data_cfg = femnist.FemnistConfig(n_clients=flc.n_clients, seed=seed + 7)
     clients, eval_set = femnist.generate(data_cfg)
     eval_batch = jax.tree.map(jnp.asarray, eval_set)
     counts = femnist.sample_counts(clients)
-    onu = fedavg.onu_of_client(fl)
 
     results = {}
     for mode in modes:
-        rng = np.random.default_rng(seed)
+        # per-mode knob filter: the baseline in a comparison run must not
+        # absorb another strategy's kwargs (e.g. fedopt's server_lr)
+        skw = fl.filter_strategy_kwargs(mode, strategy_kwargs)
+        strategy = fl.make_strategy(mode, **skw)
         params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(seed))
-        accs, involved_hist = [], []
-        fl_mode = dataclasses.replace(fl, mode=mode)
-        for rnd in range(n_rounds):
-            sel = selection.select_clients(rng, fl.n_clients, fl.n_selected)
-            rt = fedavg.round_transport(fl_mode, rng, sel, counts, onu)
-            mask = rt["involved"]
-            involved_hist.append(float(mask.sum()))
-            # only involved clients' updates count — skip training the rest
-            # (classical stragglers trained in vain; we elide the wasted work)
-            active = sel[mask > 0]
-            if len(active) == 0:
-                accs.append(accs[-1] if accs else 0.0)
-                continue
-            # pad to a chunk multiple with weight-0 dummies: keeps the vmap
-            # shapes constant across rounds (one jit compile total)
-            pad = (-len(active)) % fl.client_chunk
-            padded = np.concatenate([active, np.full(pad, active[0])])
-            w = np.concatenate([counts[active], np.zeros(pad, np.float32)])
-            cb = jax.tree.map(
-                lambda *xs: jnp.stack(xs),
-                *[femnist.client_minibatches(rng, clients[c], fl.local_steps,
-                                             fl.local_batch) for c in padded])
-            deltas, _ = fedavg.train_selected_clients(params, cb, _loss, fl)
-            params, _ = fedavg.apply_round(
-                params, deltas, jnp.asarray(w),
-                jnp.concatenate([jnp.ones(len(active)), jnp.zeros(pad)]),
-                jnp.asarray(onu[padded]), fl.n_onus, mode)
-            acc = float(_loss(params, eval_batch)[1]["acc"])
-            accs.append(acc)
-        results[mode] = {"accs": accs, "involved": involved_hist}
+        backend = fl.ClientStackedBackend(flc, strategy, params, clients,
+                                          eval_batch, _loss,
+                                          sample_counts=counts)
+        exp = fl.ExperimentConfig(fl=flc, strategy=fl.canonical_name(mode),
+                                  strategy_kwargs=tuple(sorted(skw.items())),
+                                  overselect=overselect, p_crash=p_crash,
+                                  p_transient=p_transient,
+                                  n_rounds=n_rounds, seed=seed)
+        hist = fl.RoundLoop(exp, backend).run()
+        results[mode] = {"accs": [a if a is not None else 0.0
+                                  for a in hist.column("acc")],
+                         "involved": hist.column("involved")}
     return results
 
 
-def main(cached: str = "results/fig2c.json"):
+def rows_from_results(res) -> list:
+    """Per-round rows (machine-readable) from a run()/cached result dict."""
+    modes = list(res)
+    n = len(res[modes[0]]["accs"])
+    rows = []
+    for i in range(n):
+        row = {"round": i}
+        for m in modes:
+            row[f"{m}_acc"] = res[m]["accs"][i]
+            row[f"{m}_involved"] = res[m]["involved"][i]
+        rows.append(row)
+    return rows
+
+
+def main(argv=None, cached: str = "results/fig2c.json"):
     """Prints the stored 30-round N=128 experiment when present (a full
-    recompute is ~45 CPU-min; regenerate with bench_accuracy.run())."""
+    recompute is ~45 CPU-min; regenerate with bench_accuracy.run()).
+    Any non-default strategy/rounds/fault knob forces a fresh run."""
+    import argparse
     import json
     import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="recompute with this many rounds (default: cached)")
+    ap.add_argument("--n-selected", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    fl.add_experiment_cli_args(ap)
+    args = ap.parse_args(argv)
+
+    from repro.pon import PonConfig, pon_config_from_args
     t0 = time.time()
-    if os.path.exists(cached):
+    strategy = fl.canonical_name(args.strategy)
+    # the cache only represents the stock experiment — ANY knob off its
+    # default (strategy, rounds, fault injection, N, seed, PON transport)
+    # must force a fresh run instead of printing stale numbers
+    defaults = (args.rounds is None and strategy == "sfl_two_step"
+                and args.overselect == 0.0 and args.p_crash == 0.0
+                and args.p_transient == 0.0 and not args.full
+                and args.n_selected == 128 and args.seed == 0
+                and pon_config_from_args(args) == PonConfig())
+    if defaults and os.path.exists(cached):
         print(f"# cached run from {cached} (30 rounds, N=128)")
         res = json.load(open(cached))
     else:
-        res = run(n_rounds=12)
+        res = run(n_rounds=args.rounds if args.rounds is not None else 12,
+                  n_selected=args.n_selected, full=args.full, seed=args.seed,
+                  modes=fl.comparison_modes(strategy),
+                  pon=pon_config_from_args(args),
+                  overselect=args.overselect, p_crash=args.p_crash,
+                  p_transient=args.p_transient,
+                  strategy_kwargs=fl.strategy_kwargs_from_args(args))
+    modes = list(res)
     print("bench_accuracy (Fig 2c)")
-    print("round,classical_acc,sfl_acc,classical_involved,sfl_involved")
-    n = len(res["sfl"]["accs"])
+    print("round," + ",".join(f"{m}_acc" for m in modes)
+          + "," + ",".join(f"{m}_involved" for m in modes))
+    n = len(res[modes[0]]["accs"])
     for i in range(0, n, max(1, n // 10)):
-        print(f"{i},{res['classical']['accs'][i]:.3f},{res['sfl']['accs'][i]:.3f},"
-              f"{res['classical']['involved'][i]:.0f},{res['sfl']['involved'][i]:.0f}")
-    ca, sa = res["classical"]["accs"][-1], res["sfl"]["accs"][-1]
-    print(f"# final: classical {ca:.3f} vs SFL {sa:.3f} "
-          f"(+{100*(sa-ca)/max(ca,1e-9):.1f}% rel; paper: 0.77 vs 0.85, +10%)"
-          f"  [{time.time()-t0:.0f}s]")
+        print(f"{i},"
+              + ",".join(f"{res[m]['accs'][i]:.3f}" for m in modes) + ","
+              + ",".join(f"{res[m]['involved'][i]:.0f}" for m in modes))
+    finals = {m: res[m]["accs"][-1] for m in modes}
+    ca = finals.get("classical", 0.0)
+    other = [m for m in modes if m != "classical"]
+    if other and ca:
+        sa = finals[other[0]]
+        print(f"# final: classical {ca:.3f} vs {other[0]} {sa:.3f} "
+              f"(+{100*(sa-ca)/max(ca,1e-9):.1f}% rel; paper: 0.77 vs 0.85, "
+              f"+10%)  [{time.time()-t0:.0f}s]")
+    return rows_from_results(res)
 
 
 if __name__ == "__main__":

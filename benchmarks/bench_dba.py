@@ -24,7 +24,9 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.pon import PonConfig, round_times
+from repro import fl
+from repro.core.fedavg import FLConfig
+from repro.pon import PonConfig
 
 DBAS: Sequence[str] = ("fifo", "tdma", "ipact", "fl_priority")
 WAVELENGTHS: Sequence[int] = (1, 2, 4)
@@ -44,15 +46,28 @@ def run(rounds: int = 8, seed: int = 0, n_selected: int = 96,
             for load in bg_loads:
                 cfg = PonConfig(dba=dba, n_wavelengths=n_w,
                                 background_load=load, sfl_queueing=True)
-                acc = {m: {"inv": [], "up": []} for m in ("classical", "sfl")}
-                for r in range(rounds):
-                    rng = np.random.default_rng(seed + 1000 * r)
-                    sel = rng.choice(cfg.n_clients, n_selected, replace=False)
-                    for m in acc:
-                        rt = round_times(cfg, np.random.default_rng(seed + r),
-                                         sel, onu, counts, m)
-                        acc[m]["inv"].append(float(rt["involved"].sum()))
-                        acc[m]["up"].append(rt["upstream_mbits"])
+                acc = {}
+                flc = FLConfig(n_onus=cfg.n_onus,
+                               clients_per_onu=cfg.clients_per_onu,
+                               n_selected=n_selected, pon=cfg)
+                for m in ("classical", "sfl"):
+                    # transport-only RoundLoop: selection + event-sim
+                    # transport, no training — the History IS the sweep
+                    # result. One single-round loop per (round, mode) with
+                    # a per-round seed keeps the draws PAIRED across modes
+                    # (same selection, same transport stream state), so
+                    # each cell compares the modes, not selection variance.
+                    backend = fl.TransportBackend(fl.make_strategy(m),
+                                                  counts, onu)
+                    inv, up = [], []
+                    for r in range(rounds):
+                        exp = fl.ExperimentConfig(
+                            fl=flc, strategy=fl.canonical_name(m),
+                            n_rounds=1, seed=seed + 1000 * r)
+                        rec = fl.RoundLoop(exp, backend).run().last()
+                        inv.append(rec["involved"])
+                        up.append(rec["upstream_mbits"])
+                    acc[m] = {"inv": inv, "up": up}
                 rows.append({
                     "dba": dba, "wavelengths": n_w, "bg_load": load,
                     "classical_mbits": float(np.mean(acc["classical"]["up"])),
@@ -91,6 +106,7 @@ def main(argv=None):
     print(f"# SFL involvement frac: clean slice {clean:.2f} | "
           f"bg {BG_LOADS[-1]:.1f} fifo {loaded:.2f} (degraded) | "
           f"bg {BG_LOADS[-1]:.1f} fl_priority {guarded:.2f} (protected)")
+    return rows
 
 
 if __name__ == "__main__":

@@ -48,11 +48,13 @@ def main(argv=None):
     pon = pon_config_from_args(args)
     print("bench_involved (Fig 2b)")
     print("N,classical_mean,classical_min,classical_max,sfl_mean,sfl_frac")
-    for r in run(rounds=args.rounds, seed=args.seed, pon=pon):
+    rows = run(rounds=args.rounds, seed=args.seed, pon=pon)
+    for r in rows:
         print(f"{r['N']},{r['classical_mean']:.1f},{r['classical_min']:.0f},"
               f"{r['classical_max']:.0f},{r['sfl_mean']:.1f},{r['sfl_frac']:.2f}")
     print("# paper check: classical fluctuates in [1,20] independent of N; "
           "SFL involves ~all selected")
+    return rows
 
 
 if __name__ == "__main__":

@@ -32,13 +32,20 @@ def main():
     x = jax.random.normal(key, (C, N), jnp.float32)
     w = jax.random.uniform(key, (C,)) * 100
     m = jnp.ones((C,))
+    rows = []
     us = _time(lambda a, b, c: ops.agg_reduce(a, b, c), x, w, m)
-    print(f"agg_reduce_onu20x6.6M,{us:.0f},gbps={C*N*4/us/1e3:.1f}")
+    rows.append({"name": "agg_reduce_onu20x6.6M", "us_per_call": us,
+                 "derived": f"gbps={C*N*4/us/1e3:.1f}"})
     q_us = _time(lambda a: ops.quantize_int8(a, key), x[0])
-    print(f"quantize_int8_6.6M,{q_us:.0f},wire_reduction=4x")
+    rows.append({"name": "quantize_int8_6.6M", "us_per_call": q_us,
+                 "derived": "wire_reduction=4x"})
     qq, ss = ops.quantize_int8(x[0], key)
     d_us = _time(lambda a, s: ops.dequantize_int8(a, s), qq, ss)
-    print(f"dequantize_int8_6.6M,{d_us:.0f},")
+    rows.append({"name": "dequantize_int8_6.6M", "us_per_call": d_us,
+                 "derived": ""})
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -58,6 +58,7 @@ def main(argv=None):
         print(f"# paper check: saving(N=48)={by_n[48]['saving_pct']:.1f}% "
               f"(paper 66.7%), saving(N=128)={by_n[128]['saving_pct']:.1f}% "
               f"(paper 87.5%)")
+    return rows
 
 
 if __name__ == "__main__":

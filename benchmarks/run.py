@@ -4,14 +4,20 @@
 ``name,us_per_call,derived``-style CSV blocks per bench:
   upstream  — Fig. 2a (upstream Mb per round vs N)
   involved  — Fig. 2b (involved clients under the 25 s deadline)
-  accuracy  — Fig. 2c (FedAvg accuracy, SFL vs classical)
+  accuracy  — Fig. 2c (FedAvg accuracy, any registered repro.fl strategy)
   dba       — DBA policy × wavelengths × background-load sweep (beyond-paper)
   kernels   — ONU-AF / quantize micro-bench
   report    — EXPERIMENTS tables from results/dryrun/*.json (if present)
+
+``--json OUT.json`` additionally writes every bench's rows as
+machine-readable JSON ({bench: [row, ...]}) so the perf/accuracy
+trajectory is trackable across PRs; ``--rounds R`` overrides the accuracy
+bench's round count (forces a fresh run instead of the cached figure).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -21,27 +27,45 @@ def main() -> None:
                     help="upstream|involved|accuracy|dba|kernels|report")
     ap.add_argument("--full", action="store_true",
                     help="accuracy bench with the full LEAF CNN (slow)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="accuracy bench rounds (forces recompute)")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write per-bench rows as JSON")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_dba, bench_involved,
                             bench_kernels, bench_upstream, report)
+
+    acc_argv = []
+    if args.rounds is not None:
+        acc_argv += ["--rounds", str(args.rounds)]
+    if args.full:
+        acc_argv += ["--full"]
 
     benches = {
         "upstream": lambda: bench_upstream.main([]),
         "involved": lambda: bench_involved.main([]),
         "dba": lambda: bench_dba.main([]),
         "kernels": bench_kernels.main,
-        "accuracy": bench_accuracy.main,
+        "accuracy": lambda: bench_accuracy.main(acc_argv),
     }
     names = [args.only] if args.only else list(benches)
+    collected = {}
     for name in names:
         if name == "report":
             report.main()
             continue
         t0 = time.time()
         print(f"\n=== {name} ===")
-        benches[name]()
+        rows = benches[name]()
+        if rows is not None:
+            collected[name] = rows
         print(f"=== {name} done in {time.time()-t0:.1f}s ===")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=2, default=float)
+        print(f"[json] wrote {sum(len(v) for v in collected.values())} rows "
+              f"({', '.join(collected)}) to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
 """The paper's experiment (Fig. 2): FedAvg on FEMNIST over a simulated PON,
 classical benchmark vs two-step SFL — accuracy, involvement and upstream
-traffic per round.
+traffic per round. Runs through the ``repro.fl`` RoundLoop; any registered
+strategy can stand in for SFL (``--strategy fedprox --fedprox-mu 0.1``),
+and the fault-tolerance knobs (``--overselect``, ``--p-crash``,
+``--p-transient``) flow through the loop's mask path.
 
     PYTHONPATH=src python examples/train_femnist_sfl.py --rounds 30
     PYTHONPATH=src python examples/train_femnist_sfl.py --rounds 200 --full \
         --n-selected 128        # the paper's full setting (slow on CPU)
+    PYTHONPATH=src python examples/train_femnist_sfl.py --rounds 30 \
+        --strategy fedopt --server-opt yogi     # FedYogi server optimizer
 """
 import argparse
 import os
@@ -21,23 +26,31 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="exact LEAF CNN (26.4 MB updates); default reduced")
     ap.add_argument("--seed", type=int, default=0)
-    # event-simulator transport (defaults = the paper's fixed slice)
-    from repro.pon import add_pon_cli_args, pon_config_from_args
-    add_pon_cli_args(ap)
+    # strategy + event-simulator transport + fault-tolerance knobs — the
+    # shared repro.fl flag set (defaults = the paper's fixed slice, SFL)
+    from repro import fl
+    from repro.pon import pon_config_from_args
+    fl.add_experiment_cli_args(ap)
     args = ap.parse_args()
+
+    modes = fl.comparison_modes(args.strategy)
 
     from benchmarks import bench_accuracy
     res = bench_accuracy.run(n_rounds=args.rounds, n_selected=args.n_selected,
-                             full=args.full, seed=args.seed,
-                             pon=pon_config_from_args(args))
-    print("round,classical_acc,sfl_acc,classical_involved,sfl_involved")
+                             full=args.full, seed=args.seed, modes=modes,
+                             pon=pon_config_from_args(args),
+                             overselect=args.overselect,
+                             p_crash=args.p_crash,
+                             p_transient=args.p_transient,
+                             strategy_kwargs=fl.strategy_kwargs_from_args(args))
+    print("round," + ",".join(f"{m}_acc" for m in modes)
+          + "," + ",".join(f"{m}_involved" for m in modes))
     for i in range(args.rounds):
-        print(f"{i},{res['classical']['accs'][i]:.4f},{res['sfl']['accs'][i]:.4f},"
-              f"{res['classical']['involved'][i]:.0f},"
-              f"{res['sfl']['involved'][i]:.0f}")
-    ca, sa = res["classical"]["accs"][-1], res["sfl"]["accs"][-1]
-    print(f"\nfinal accuracy: classical {ca:.3f} | SFL {sa:.3f} "
-          f"(paper: 0.77 vs 0.85 at N=128)")
+        print(f"{i},"
+              + ",".join(f"{res[m]['accs'][i]:.4f}" for m in modes) + ","
+              + ",".join(f"{res[m]['involved'][i]:.0f}" for m in modes))
+    finals = " | ".join(f"{m} {res[m]['accs'][-1]:.3f}" for m in modes)
+    print(f"\nfinal accuracy: {finals} (paper: 0.77 vs 0.85 at N=128)")
 
 
 if __name__ == "__main__":

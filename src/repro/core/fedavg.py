@@ -7,6 +7,11 @@ simulator's participation mask. Reproduces Fig. 2 end-to-end on CPU.
 
 The scalable gradient regime for the big LM archs lives in
 ``repro/launch/train.py`` (same aggregation semantics, collective form).
+
+These are the primitives; the public API for running experiments is
+``repro.fl`` (Strategy registry + RoundLoop driver, DESIGN.md §10) —
+its ``sfl_two_step``/``classical`` strategies are bit-for-bit the
+``mode`` branches of :func:`apply_round`, which is kept for direct use.
 """
 from __future__ import annotations
 
@@ -95,18 +100,50 @@ def local_sgd(params, batches: Dict[str, jax.Array], loss_fn: Callable,
     return p, jnp.mean(losses)
 
 
+def local_sgd_prox(params, batches: Dict[str, jax.Array], loss_fn: Callable,
+                   lr: float, steps: int, mu: float, ref_params):
+    """H steps of proximal SGD (FedProx): grad += mu · (w − w_global).
+
+    ``ref_params`` is the round's global model; the proximal term pulls each
+    local trajectory back toward it, which tames client drift under the
+    non-IID splits the PON deadline makes worse.
+    """
+    def step(p, batch):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        def upd(w, gw, rw):
+            wf = w.astype(jnp.float32)
+            gp = gw + mu * (wf - rw.astype(jnp.float32))
+            return (wf - lr * gp).astype(w.dtype)
+        p = jax.tree.map(upd, p, g, ref_params)
+        return p, l
+    p, losses = jax.lax.scan(step, params,
+                             jax.tree.map(lambda x: x[:steps], batches))
+    return p, jnp.mean(losses)
+
+
+def default_local_update(global_params, batches, loss_fn: Callable,
+                         fl: FLConfig):
+    """One client's FedAvg local update: H SGD steps → weight delta."""
+    p, l = local_sgd(global_params, batches, loss_fn, fl.local_lr, fl.local_steps)
+    delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                         p, global_params)
+    return delta, l
+
+
 def train_selected_clients(global_params, client_batches, loss_fn: Callable,
-                           fl: FLConfig):
+                           fl: FLConfig, local_update: Optional[Callable] = None):
     """Run local training for all selected clients; returns stacked deltas.
 
     client_batches: dict of arrays with leading (n_sel, steps, batch, ...)
     axes. vmap is chunked (client_chunk at a time) to bound host memory.
+    ``local_update(global_params, batches, loss_fn, fl) -> (delta, loss)``
+    is the per-client rule (a ``repro.fl`` Strategy hook); default FedAvg.
     """
+    if local_update is None:
+        local_update = default_local_update
+
     def one_client(batches):
-        p, l = local_sgd(global_params, batches, loss_fn, fl.local_lr, fl.local_steps)
-        delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                             p, global_params)
-        return delta, l
+        return local_update(global_params, batches, loss_fn, fl)
 
     n_sel = jax.tree.leaves(client_batches)[0].shape[0]
     chunk = max(1, min(fl.client_chunk, n_sel))

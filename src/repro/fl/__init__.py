@@ -1,0 +1,49 @@
+"""repro.fl — the public API for running federated experiments.
+
+    from repro import fl
+
+    exp = fl.ExperimentConfig(n_rounds=30).with_fl(n_selected=128)
+    backend = fl.ClientStackedBackend(exp.fl, exp.make_strategy(), params,
+                                      clients, eval_batch, loss_fn)
+    history = fl.RoundLoop(exp, backend).run()
+
+Strategies (aggregation/selection rules) are pluggable via the registry —
+``fl.make_strategy("fedprox", mu=0.1)`` — and both training regimes (the
+client-stacked paper engine and the shard_map gradient regime) sit behind
+the same ``RoundLoop`` driver. See DESIGN.md §10.
+"""
+from repro.fl.strategy import (
+    Strategy,
+    SflTwoStep,
+    Classical,
+    FedProx,
+    FedOpt,
+    register_strategy,
+    make_strategy,
+    canonical_name,
+    strategy_names,
+)
+from repro.fl.config import (
+    ExperimentConfig,
+    add_experiment_cli_args,
+    comparison_modes,
+    experiment_config_from_args,
+    filter_strategy_kwargs,
+    strategy_kwargs_from_args,
+)
+from repro.fl.loop import History, RoundLoop
+from repro.fl.backends import (
+    ClientStackedBackend,
+    GradientBackend,
+    TransportBackend,
+)
+
+__all__ = [
+    "Strategy", "SflTwoStep", "Classical", "FedProx", "FedOpt",
+    "register_strategy", "make_strategy", "canonical_name", "strategy_names",
+    "ExperimentConfig", "add_experiment_cli_args", "comparison_modes",
+    "experiment_config_from_args", "filter_strategy_kwargs",
+    "strategy_kwargs_from_args",
+    "History", "RoundLoop",
+    "ClientStackedBackend", "GradientBackend", "TransportBackend",
+]

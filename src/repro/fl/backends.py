@@ -1,0 +1,180 @@
+"""RoundLoop backends — the two training regimes behind one driver.
+
+A backend owns model state and the learning side of a round; the RoundLoop
+owns selection, failures, and PON transport. Contract:
+
+    backend.strategy        — the Strategy instance (transport + hooks)
+    backend.sample_counts   — (n_clients,) k_ij
+    backend.onu_ids         — (n_clients,) int
+    backend.run_round(rnd, selected, mask, rt, rng) -> metrics dict
+
+  * ``ClientStackedBackend`` — the faithful paper regime: every involved
+    client trains its own model copy for H local steps (chunked vmap), the
+    strategy aggregates the stacked deltas and applies the server update.
+  * ``GradientBackend``      — the scalable shard_map regime: one global
+    model, FL weights folded into per-row ``client_weight`` so grad(loss)
+    is the K-normalized aggregate; the collective schedule (two-step vs
+    flat) is picked by the sharding rules from ``strategy.transport``.
+  * ``TransportBackend``     — no learning at all; for transport-only
+    sweeps (DBA policies, wavelengths, background load).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedavg
+from repro.core.fedavg import FLConfig
+from repro.data import femnist
+
+from repro.fl.strategy import Strategy
+
+
+class ClientStackedBackend:
+    """Per-client model copies + H local steps (reproduces Fig. 2 on CPU)."""
+
+    def __init__(self, fl: FLConfig, strategy: Strategy, params,
+                 clients, eval_batch, loss_fn: Callable,
+                 sample_counts: Optional[np.ndarray] = None,
+                 onu_ids: Optional[np.ndarray] = None,
+                 minibatch_fn: Callable = femnist.client_minibatches,
+                 eval_every: int = 1):
+        self.fl = fl
+        self.eval_every = max(1, eval_every)
+        self.strategy = strategy
+        self.params = params
+        self.server_state = strategy.init_state(params)
+        self.clients = clients
+        self.eval_batch = eval_batch
+        self.loss_fn = loss_fn
+        self.sample_counts = (sample_counts if sample_counts is not None
+                              else femnist.sample_counts(clients))
+        self.onu_ids = onu_ids if onu_ids is not None else fedavg.onu_of_client(fl)
+        self.minibatch_fn = minibatch_fn
+        self._last_eval: Dict[str, float] = {}
+
+    def _eval(self) -> Dict[str, float]:
+        loss, metrics = self.loss_fn(self.params, self.eval_batch)
+        out = {"eval_loss": float(loss)}
+        out.update({k: float(v) for k, v in metrics.items()})
+        self._last_eval = out
+        return out
+
+    def run_round(self, rnd: int, selected: np.ndarray, mask: np.ndarray,
+                  rt: Dict[str, Any], rng: np.random.Generator
+                  ) -> Dict[str, float]:
+        fl = self.fl
+        active = selected[mask > 0]
+        if len(active) == 0:
+            # nothing beat the deadline — carry the last eval forward
+            return dict(self._last_eval) if self._last_eval else {"acc": 0.0}
+        # pad to a chunk multiple with weight-0 dummies: keeps the vmap
+        # shapes constant across rounds (one jit compile total)
+        pad = (-len(active)) % fl.client_chunk
+        padded = np.concatenate([active, np.full(pad, active[0])])
+        w = np.concatenate([self.sample_counts[active], np.zeros(pad, np.float32)])
+        cb = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[self.minibatch_fn(rng, self.clients[c], fl.local_steps,
+                                fl.local_batch) for c in padded])
+        deltas, _ = fedavg.train_selected_clients(
+            self.params, cb, self.loss_fn, fl,
+            local_update=self.strategy.local_update)
+        agg, stats = self.strategy.aggregate(
+            deltas, jnp.asarray(w),
+            jnp.concatenate([jnp.ones(len(active)), jnp.zeros(pad)]),
+            jnp.asarray(self.onu_ids[padded]), fl.n_onus)
+        self.params, self.server_state = self.strategy.server_update(
+            self.params, agg, self.server_state)
+        out = {"uplink_models": float(stats["uplink_models"])}
+        if (rnd + 1) % self.eval_every == 0:
+            out.update(self._eval())
+        elif self._last_eval:
+            out.update(self._last_eval)
+        return out
+
+
+class GradientBackend:
+    """One global model; the round's (k_ij · mask) folds into client_weight.
+
+    Wraps ``launch.specs.make_train_step``: the strategy's transport picks
+    the sharding rules (two-step FSDP schedule vs replicated flat
+    all-reduce), so the collective form of the paper's aggregation is
+    induced by the same Strategy object the client-stacked regime uses.
+    """
+
+    def __init__(self, model_cfg, strategy: Strategy, mesh, rules,
+                 opt_name: str = "adamw", lr: float = 3e-4,
+                 batch: int = 8, seq: int = 128, microbatches: int = 1,
+                 seed: int = 0,
+                 sample_counts: Optional[np.ndarray] = None,
+                 onu_ids: Optional[np.ndarray] = None,
+                 n_clients: Optional[int] = None):
+        # model/data imports are lazy so `import repro.fl` stays light for
+        # the client-stacked path
+        from repro.launch import specs as S
+        from repro.models import transformer
+        from repro.optim import make_optimizer
+
+        self.cfg = model_cfg
+        self.strategy = strategy
+        self.mesh = mesh
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        n = n_clients if n_clients is not None else batch
+        rng = np.random.default_rng(seed)
+        self.sample_counts = (sample_counts if sample_counts is not None
+                              else rng.integers(50, 400, n).astype(np.float32))
+        self.onu_ids = (onu_ids if onu_ids is not None
+                        else np.zeros(len(self.sample_counts), np.int64))
+        self.params, _ = transformer.init_params(model_cfg,
+                                                 jax.random.PRNGKey(seed))
+        self.opt = make_optimizer(opt_name)
+        self.opt_state = self.opt.init(self.params)
+        self.train_step = jax.jit(S.make_train_step(
+            model_cfg, rules, opt_name, lr, microbatches, seed=seed))
+
+    def run_round(self, rnd: int, selected: np.ndarray, mask: np.ndarray,
+                  rt: Dict[str, Any], rng: np.random.Generator
+                  ) -> Dict[str, float]:
+        from repro.data import lm as lm_data
+        weights = (self.sample_counts[selected] * mask).astype(np.float32)
+        if len(weights) > self.batch:
+            # over-selection: more clients than batch rows — involved
+            # clients (selection order) fill the rows first, so backups
+            # replace deadline stragglers instead of starving the round
+            order = np.concatenate([np.where(mask > 0)[0],
+                                    np.where(mask <= 0)[0]])
+            weights = weights[order[:self.batch]]
+        elif len(weights) < self.batch:
+            weights = np.concatenate(
+                [weights, np.zeros(self.batch - len(weights), np.float32)])
+        batch_np = next(lm_data.lm_batches(
+            self.seed * 1000 + rnd, 1, self.batch, self.seq,
+            self.cfg.vocab_size))
+        batch = {
+            "tokens": jnp.asarray(batch_np["tokens"]),
+            "client_weight": jnp.asarray(weights, jnp.float32),
+        }
+        t0 = time.time()
+        self.params, self.opt_state, loss = self.train_step(
+            self.params, self.opt_state, batch)
+        return {"loss": float(loss), "dt": time.time() - t0}
+
+
+class TransportBackend:
+    """Transport-only: the RoundLoop records involvement/upstream, no model."""
+
+    def __init__(self, strategy: Strategy, sample_counts: np.ndarray,
+                 onu_ids: np.ndarray):
+        self.strategy = strategy
+        self.sample_counts = sample_counts
+        self.onu_ids = onu_ids
+
+    def run_round(self, rnd, selected, mask, rt, rng) -> Dict[str, float]:
+        return {}

@@ -1,0 +1,144 @@
+"""ExperimentConfig — one object that fully specifies a federated run.
+
+Composes the FL topology/learning knobs (``FLConfig``), the PON transport
+(``PonConfig``, carried inside ``FLConfig.pon``), and the experiment-level
+axes the drivers used to hard-code: strategy name + kwargs, over-selection
+backups, and the synthetic ``FailureModel``. Buildable from one shared
+argparse helper (``add_experiment_cli_args`` / ``experiment_config_from_args``)
+so launch/train.py, the benchmarks, and the examples expose the identical
+flag set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+from repro.core.fedavg import FLConfig
+from repro.pon import add_pon_cli_args, pon_config_from_args
+from repro.runtime.failures import FailureModel
+
+from repro.fl.strategy import (Strategy, canonical_name, make_strategy,
+                               strategy_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    fl: FLConfig = FLConfig()
+    strategy: str = "sfl_two_step"
+    # kwargs for the strategy constructor, as a tuple of (key, value) pairs
+    # so the config stays hashable; use ``with_strategy`` to set from a dict
+    strategy_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    # fault tolerance: extra backup clients per round (fraction of N) and
+    # the synthetic crash/transient failure injector
+    overselect: float = 0.0
+    p_crash: float = 0.0
+    p_transient: float = 0.0
+    mean_recovery_rounds: float = 3.0
+    failure_seed: Optional[int] = None    # default: seed + 1
+    # driver (eval cadence is a backend knob: ClientStackedBackend(eval_every=…))
+    n_rounds: int = 30
+    seed: int = 0
+
+    def make_strategy(self) -> Strategy:
+        return make_strategy(self.strategy, **dict(self.strategy_kwargs))
+
+    def make_failure_model(self) -> Optional[FailureModel]:
+        if self.p_crash <= 0.0 and self.p_transient <= 0.0:
+            return None
+        seed = self.failure_seed if self.failure_seed is not None else self.seed + 1
+        return FailureModel(p_crash=self.p_crash, p_transient=self.p_transient,
+                            mean_recovery_rounds=self.mean_recovery_rounds,
+                            seed=seed)
+
+    def with_fl(self, **kw) -> "ExperimentConfig":
+        """Replace fields of the nested FLConfig."""
+        return dataclasses.replace(self, fl=dataclasses.replace(self.fl, **kw))
+
+    def with_strategy(self, name: str, **kwargs) -> "ExperimentConfig":
+        return dataclasses.replace(self, strategy=name,
+                                   strategy_kwargs=tuple(sorted(kwargs.items())))
+
+
+# ---------------------------------------------------------------------------
+# shared CLI helper
+# ---------------------------------------------------------------------------
+
+def add_experiment_cli_args(ap, strategy_default: str = "sfl_two_step") -> None:
+    """Attach the full federated-experiment flag set to an argparse parser.
+
+    Includes the PON transport flags (``add_pon_cli_args``) plus strategy /
+    selection / failure knobs. One definition shared by launch/train.py,
+    the benchmarks, and the examples so the flag set cannot drift.
+    """
+    add_pon_cli_args(ap)
+    g = ap.add_argument_group("federated experiment (repro.fl)")
+    g.add_argument("--strategy", default=strategy_default,
+                   help=f"aggregation strategy: {'|'.join(strategy_names())} "
+                        "(alias: sfl)")
+    g.add_argument("--overselect", type=float, default=0.0,
+                   help="extra backup clients per round, fraction of N "
+                        "(Google FL-system practice)")
+    g.add_argument("--p-crash", type=float, default=0.0,
+                   help="per-round client crash probability (FailureModel)")
+    g.add_argument("--p-transient", type=float, default=0.0,
+                   help="per-round transient-failure probability (FailureModel)")
+    g.add_argument("--fedprox-mu", type=float, default=0.01,
+                   help="fedprox proximal coefficient mu")
+    g.add_argument("--server-opt", default="adamw",
+                   help="fedopt server optimizer: adamw|yogi|sgd|sgdm")
+    g.add_argument("--server-lr", type=float, default=None,
+                   help="fedopt server learning rate (default: strategy's)")
+
+
+def strategy_kwargs_from_args(args) -> dict:
+    """The raw strategy-knob dict carried by the shared flag set. Pair with
+    :func:`filter_strategy_kwargs` before instantiating a strategy; this is
+    the ONE place a new strategy's CLI knob gets added."""
+    return {"mu": args.fedprox_mu, "server_opt": args.server_opt,
+            "server_lr": args.server_lr}
+
+
+def comparison_modes(strategy: str) -> list:
+    """The strategy list benchmarks/examples compare: the classical
+    baseline plus the requested strategy (deduplicated)."""
+    name = canonical_name(strategy)
+    return ["classical"] + ([name] if name != "classical" else [])
+
+
+def filter_strategy_kwargs(name: str, kwargs) -> dict:
+    """Restrict a shared CLI kwargs dict to the knobs ``name`` consumes.
+
+    The shared flag set carries every strategy's knobs (--fedprox-mu,
+    --server-opt, --server-lr); without this filter a baseline in the same
+    run would silently absorb them (e.g. classical inheriting the fedopt
+    --server-lr and no longer being the canonical server_lr=1.0 FedAvg).
+    """
+    name = canonical_name(name)
+    kwargs = dict(kwargs or {})
+    out = {}
+    if name == "fedprox" and "mu" in kwargs:
+        out["mu"] = kwargs["mu"]
+    if name == "fedopt":
+        if kwargs.get("server_opt") is not None:
+            out["server_opt"] = kwargs["server_opt"]
+        if kwargs.get("server_lr") is not None:
+            out["server_lr"] = kwargs["server_lr"]
+    return out
+
+
+def experiment_config_from_args(args, **overrides) -> ExperimentConfig:
+    """Build the ExperimentConfig selected by ``add_experiment_cli_args``.
+
+    ``overrides`` replace top-level ExperimentConfig fields (n_rounds, seed,
+    …); tune the nested FLConfig afterwards via ``cfg.with_fl(...)``.
+    """
+    pon = pon_config_from_args(args)
+    fl = FLConfig(n_onus=pon.n_onus, clients_per_onu=pon.clients_per_onu,
+                  pon=pon)
+    name = canonical_name(args.strategy)
+    skw = filter_strategy_kwargs(name, strategy_kwargs_from_args(args))
+    return ExperimentConfig(
+        fl=fl, strategy=name, strategy_kwargs=tuple(sorted(skw.items())),
+        overselect=args.overselect, p_crash=args.p_crash,
+        p_transient=args.p_transient,
+        seed=getattr(args, "seed", 0), **overrides)

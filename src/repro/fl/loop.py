@@ -1,0 +1,113 @@
+"""RoundLoop — the single per-round pipeline driver.
+
+Every federated run in this repo is the same five-stage round:
+
+    selection (N + overselect backups) → failure injection (FailureModel)
+    → PON transport (event simulator → involvement mask) → backend
+    training + strategy aggregation → eval/metrics sink
+
+This used to be re-implemented in four places (core/fedavg callers,
+launch/train.py, bench_accuracy, the example) with the strategy hard-coded
+as a mode string; RoundLoop owns it once. Benchmarks consume the History
+sink instead of hand-rolled loops; drivers attach callbacks (logging,
+checkpointing) instead of editing the loop.
+
+The mask path is where fault tolerance composes: the PON deadline mask,
+the synthetic FailureModel, and over-selection backups all meet in one
+(selected,)-shaped involvement vector — the paper's own straggler-drop
+renormalization handles the rest (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core import selection
+from repro.pon import round_times
+
+from repro.fl.config import ExperimentConfig
+
+
+class History:
+    """Per-round record sink: a list of flat dicts + column extraction."""
+
+    def __init__(self):
+        self.records: List[Dict[str, Any]] = []
+
+    def append(self, rec: Dict[str, Any]) -> None:
+        self.records.append(rec)
+
+    def column(self, key: str, default=None) -> List[Any]:
+        return [r.get(key, default) for r in self.records]
+
+    def last(self) -> Dict[str, Any]:
+        return self.records[-1] if self.records else {}
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+
+Callback = Callable[["RoundLoop", Dict[str, Any]], None]
+
+
+class RoundLoop:
+    """Drives rounds of ``cfg`` against a backend; collects a History.
+
+    The per-round RNG stream is a single ``np.random.default_rng(cfg.seed)``
+    consumed in a fixed order (selection draw, transport draws, minibatch
+    draws) — with ``overselect=0`` and no failure model this reproduces the
+    pre-refactor drivers bit for bit. The FailureModel keeps its own RNG so
+    enabling it does not perturb the learning stream.
+    """
+
+    def __init__(self, cfg: ExperimentConfig, backend,
+                 callbacks: Iterable[Callback] = ()):
+        self.cfg = cfg
+        self.backend = backend
+        self.callbacks: List[Callback] = list(callbacks)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.failures = cfg.make_failure_model()
+        self.history = History()
+        n = cfg.fl.n_clients
+        if len(backend.sample_counts) < n or len(backend.onu_ids) < n:
+            raise ValueError(
+                f"backend covers {len(backend.sample_counts)} clients but "
+                f"cfg.fl.n_clients={n}; selection would index out of range — "
+                "size the backend's sample_counts/onu_ids to the FL population "
+                "(GradientBackend: pass sample_counts/onu_ids or n_clients)")
+
+    @property
+    def strategy(self):
+        return self.backend.strategy
+
+    def run_round(self, rnd: int) -> Dict[str, Any]:
+        cfg, fl = self.cfg, self.cfg.fl
+        sel = selection.select_clients(self.rng, fl.n_clients, fl.n_selected,
+                                       cfg.overselect)
+        rt = round_times(fl.pon_config(), self.rng, sel, self.backend.onu_ids,
+                         self.backend.sample_counts, self.strategy.transport)
+        mask = np.asarray(rt["involved"], np.float32)
+        if self.failures is not None:
+            alive = self.failures.step(rnd, fl.n_clients)
+            mask = mask * alive[sel].astype(np.float32)
+        metrics = self.backend.run_round(rnd, sel, mask, rt, self.rng)
+        rec = {"round": rnd, "n_selected": len(sel),
+               "involved": float(mask.sum()),
+               "upstream_mbits": float(rt["upstream_mbits"])}
+        rec.update(metrics)
+        self.history.append(rec)
+        for cb in self.callbacks:
+            cb(self, rec)
+        return rec
+
+    def run(self, n_rounds: Optional[int] = None, start_round: int = 0
+            ) -> History:
+        n = n_rounds if n_rounds is not None else self.cfg.n_rounds
+        for rnd in range(start_round, n):
+            self.run_round(rnd)
+        return self.history

@@ -1,0 +1,194 @@
+"""Pluggable aggregation/selection strategies — the variable axis of FL
+over access networks.
+
+NG-EPON FL (arXiv:2109.14593) and OFDMA-F²L (arXiv:2311.15141) both keep
+the transport model fixed and vary the *strategy*; this module makes that
+axis explicit. A Strategy owns the three learning-side hooks of a round:
+
+    local_update(global_params, batches, loss_fn, fl) -> (delta, loss)
+    aggregate(deltas, weights, mask, onu_ids, n_onus)  -> (agg, stats)
+    server_update(params, agg, state)                  -> (params, state)
+
+plus ``transport`` ("sfl" | "classical") — what crosses the PON upstream,
+which the RoundLoop feeds to the event simulator. Everything else (client
+selection, failure masks, PON timing, eval) lives in ``repro.fl.loop``.
+
+Shipped strategies (see the registry):
+  * ``sfl_two_step`` (alias ``sfl``) — the paper's two-step aggregation,
+    bit-for-bit the old ``mode="sfl"`` branch of ``fedavg.apply_round``.
+  * ``classical``    — flat FedAvg benchmark, bit-for-bit the old
+    ``mode="classical"`` branch.
+  * ``fedprox``      — proximal local objective (Li et al. 2020) over the
+    SFL transport; ``mu=0`` reduces exactly to ``sfl_two_step``.
+  * ``fedopt``       — server-side AdamW/Yogi (Reddi et al. 2021) treating
+    the aggregated delta as a pseudo-gradient, replacing the fixed
+    ``server_lr=1.0`` apply.
+
+Adding a strategy is ~20 LoC: subclass, override a hook, register:
+
+    @register_strategy("my_strategy")
+    @dataclasses.dataclass(frozen=True)
+    class MyStrategy(SflTwoStep):
+        temperature: float = 1.0
+        def server_update(self, params, agg, state): ...
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, fedavg
+from repro.optim import make_optimizer
+
+
+Stats = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """Base strategy: FedAvg local SGD + server apply at ``server_lr``."""
+
+    name: ClassVar[str] = "base"
+    transport: ClassVar[str] = "sfl"   # what crosses the PON upstream
+
+    server_lr: float = 1.0
+
+    # --- hooks ------------------------------------------------------------
+    def init_state(self, params) -> Any:
+        """Server-side optimizer state (None for plain FedAvg)."""
+        return None
+
+    def local_update(self, global_params, batches, loss_fn: Callable, fl):
+        """One client's local training → (delta pytree, mean loss)."""
+        return fedavg.default_local_update(global_params, batches, loss_fn, fl)
+
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int
+                  ) -> Tuple[Any, Stats]:
+        raise NotImplementedError
+
+    def server_update(self, params, agg, state) -> Tuple[Any, Any]:
+        new_params = jax.tree.map(
+            lambda w, d: (w.astype(jnp.float32)
+                          + self.server_lr * d).astype(w.dtype),
+            params, agg)
+        return new_params, state
+
+
+@dataclasses.dataclass(frozen=True)
+class SflTwoStep(Strategy):
+    """The paper's protocol: in-ONU weighted sum (θ), cross-PON reduce."""
+
+    name: ClassVar[str] = "sfl_two_step"
+    transport: ClassVar[str] = "sfl"
+
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int):
+        agg, thetas, K = aggregation.segment_aggregate(
+            deltas, weights, mask, onu_ids, n_onus)
+        onu_active = jnp.zeros((n_onus,), jnp.float32).at[onu_ids].add(mask)
+        stats = {"K": K, "uplink_models": jnp.sum(onu_active > 0),
+                 "involved": jnp.sum(mask)}
+        return agg, stats
+
+
+@dataclasses.dataclass(frozen=True)
+class Classical(Strategy):
+    """Flat FedAvg benchmark: every involved client uploads its full model."""
+
+    name: ClassVar[str] = "classical"
+    transport: ClassVar[str] = "classical"
+
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int):
+        agg, K = aggregation.classical_aggregate(deltas, weights, mask)
+        stats = {"K": K, "uplink_models": jnp.sum(mask),
+                 "involved": jnp.sum(mask)}
+        return agg, stats
+
+
+@dataclasses.dataclass(frozen=True)
+class FedProx(SflTwoStep):
+    """Proximal local term μ/2·‖w − w_g‖² (client-drift control)."""
+
+    name: ClassVar[str] = "fedprox"
+
+    mu: float = 0.01
+
+    def local_update(self, global_params, batches, loss_fn: Callable, fl):
+        p, l = fedavg.local_sgd_prox(global_params, batches, loss_fn,
+                                     fl.local_lr, fl.local_steps,
+                                     self.mu, global_params)
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            p, global_params)
+        return delta, l
+
+
+@dataclasses.dataclass(frozen=True)
+class FedOpt(SflTwoStep):
+    """Adaptive server optimizer on the pseudo-gradient −Δ (FedAdam/FedYogi).
+
+    The aggregated client delta is the negative server gradient; the server
+    optimizer (``repro.optim`` AdamW or Yogi) replaces the fixed
+    ``server_lr=1.0`` apply of vanilla FedAvg.
+    """
+
+    name: ClassVar[str] = "fedopt"
+
+    server_opt: str = "adamw"
+    server_lr: float = 0.03
+
+    def init_state(self, params):
+        return make_optimizer(self.server_opt).init(params)
+
+    def server_update(self, params, agg, state):
+        pseudo_grad = jax.tree.map(lambda d: -d, agg)
+        return make_optimizer(self.server_opt).update(
+            params, pseudo_grad, state, self.server_lr)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, type] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_strategy(name: str, *aliases: str):
+    """Class decorator: adds a Strategy subclass to the registry."""
+    def deco(cls):
+        _REGISTRY[name] = cls
+        for a in aliases:
+            _ALIASES[a] = name
+        return cls
+    return deco
+
+
+def canonical_name(name: str) -> str:
+    if name in _REGISTRY:
+        return name
+    if name in _ALIASES:
+        return _ALIASES[name]
+    raise KeyError(
+        f"unknown strategy {name!r}; registered: {strategy_names()} "
+        f"(aliases: {sorted(_ALIASES)})")
+
+
+def strategy_names():
+    return sorted(_REGISTRY)
+
+
+def make_strategy(name: str, **kwargs) -> Strategy:
+    """Instantiate a registered strategy; unknown kwargs are dropped so one
+    shared CLI can pass its full knob set to any strategy."""
+    cls = _REGISTRY[canonical_name(name)]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in kwargs.items() if k in fields})
+
+
+register_strategy("sfl_two_step", "sfl")(SflTwoStep)
+register_strategy("classical")(Classical)
+register_strategy("fedprox")(FedProx)
+register_strategy("fedopt")(FedOpt)

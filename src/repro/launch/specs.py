@@ -80,7 +80,7 @@ def opt_state_struct(opt_name: str, params_abs):
     f32like = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32, sharding=x.sharding)
     if opt_name == "sgdm":
         return {"mu": jax.tree.map(f32like, params_abs)}
-    if opt_name == "adamw":
+    if opt_name in ("adamw", "yogi"):
         return {"m": jax.tree.map(f32like, params_abs),
                 "v": jax.tree.map(f32like, params_abs),
                 "t": jax.ShapeDtypeStruct((), jnp.int32)}
@@ -188,7 +188,8 @@ def unnormalized_loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules):
 
 def make_train_step(cfg: ModelConfig, rules: ShardingRules, opt_name: str = "adamw",
                     lr: float = 1e-4, microbatches: int = 1,
-                    transport: str = "gspmd", mesh: Optional[Mesh] = None):
+                    transport: str = "gspmd", mesh: Optional[Mesh] = None,
+                    seed: int = 0):
     """Gradient-accumulated train step.
 
     microbatches > 1 scans over batch slices, accumulating fp32 grads —
@@ -262,7 +263,17 @@ def make_train_step(cfg: ModelConfig, rules: ShardingRules, opt_name: str = "ada
 
         def train_step(params, opt_state, batch, key=None):
             if key is None:
-                key = jax.random.PRNGKey(0)
+                # derive a fresh per-step key from the run seed and the
+                # optimizer's step counter — a fixed key would repeat the
+                # same stochastic-rounding noise every step (and across
+                # seed replicas), biasing the compressed sum
+                t = opt_state.get("t") if isinstance(opt_state, dict) else None
+                if t is None:
+                    raise ValueError(
+                        "two_step_int8 with a stateless optimizer needs an "
+                        "explicit key= per step (no step counter to derive "
+                        "fresh stochastic-rounding noise from)")
+                key = jax.random.fold_in(jax.random.PRNGKey(seed), t)
             bspecs = jax.tree.map(lambda _: P("pod"), batch)
             pspecs = jax.tree.map(lambda _: P(), params)
             ospecs = jax.tree.map(lambda _: P(), opt_state)

@@ -1,12 +1,15 @@
 """End-to-end distributed training driver (the scalable gradient regime).
 
-Runs real steps on whatever devices exist (CPU here, pods in production):
+Runs real steps on whatever devices exist (CPU here, pods in production)
+through the ``repro.fl`` RoundLoop — one step per federated round:
   * model from ``--arch`` (full or ``--smoke`` reduced config)
-  * SFL semantics: per-round client selection, PON deadline mask, sample
-    weights — folded into ``client_weight`` per batch row; gradients
-    aggregate under the sharding-induced two-step schedule (FSDP:
-    reduce-scatter in-pod + all-reduce cross-pod). ``--mode classical``
-    flips the benchmark topology (replicated params, flat all-reduce).
+  * SFL semantics: per-round client selection (with ``--overselect``
+    backups), PON deadline mask × synthetic ``FailureModel``
+    (``--p-crash``/``--p-transient``), sample weights — folded into
+    ``client_weight`` per batch row; gradients aggregate under the
+    sharding-induced two-step schedule (FSDP: reduce-scatter in-pod +
+    all-reduce cross-pod). ``--strategy classical`` flips the benchmark
+    topology (replicated params, flat all-reduce).
   * checkpoint/restart (--ckpt dir; resumes from the latest step)
   * synthetic federated LM data (per-client Markov streams)
 
@@ -17,32 +20,23 @@ Example (CPU):
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, fl
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.common.sharding import ShardingRules
-from repro.core import selection
-from repro.data import lm as lm_data
-from repro.launch import specs as S
 from repro.launch.mesh import make_test_mesh
-from repro.models import transformer
-from repro.models.config import ShapeConfig
-from repro.pon import add_pon_cli_args, pon_config_from_args, round_times
 
 
-def build_rules(mesh, mode: str) -> ShardingRules:
+def build_rules(mesh, transport: str) -> ShardingRules:
     axes = tuple(mesh.axis_names)
     batch = tuple(a for a in ("pod", "data") if a in axes) or None
     rules = ShardingRules(batch=batch, fsdp="data" if "data" in axes else None,
                           tensor="model" if "model" in axes else None,
                           expert="model" if "model" in axes else None)
-    return rules.replicated() if mode == "classical" else rules
+    return rules.replicated() if transport == "classical" else rules
 
 
 def main():
@@ -54,67 +48,61 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--opt", default="adamw")
-    ap.add_argument("--mode", default="sfl", choices=["sfl", "classical"])
-    # PON transport: the event simulator's (dba, wavelengths, traffic,
-    # topology) config path — defaults reproduce the paper's fixed slice
-    add_pon_cli_args(ap)
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    # strategy / PON transport / fault-tolerance knobs — the shared
+    # repro.fl flag set (also on bench_accuracy and the examples)
+    fl.add_experiment_cli_args(ap)
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    exp = fl.experiment_config_from_args(args, n_rounds=args.steps)
+    # one selected client per batch row: client_weight aligns with the batch
+    exp = exp.with_fl(n_selected=args.batch)
+    strategy = exp.make_strategy()
+
     n_dev = len(jax.devices())
     mesh = make_test_mesh((n_dev, 1), ("data", "model"))
-    rules = build_rules(mesh, args.mode)
-    shp = ShapeConfig("cli", args.seq, args.batch, "train")
+    rules = build_rules(mesh, strategy.transport)
 
     rng = np.random.default_rng(args.seed)
-    pon = pon_config_from_args(args)
-    onu_ids = np.arange(pon.n_clients) // pon.clients_per_onu
-    sample_counts = rng.integers(50, 400, pon.n_clients).astype(np.float32)
+    flc = exp.fl
+    onu_ids = np.arange(flc.n_clients) // flc.clients_per_onu
+    sample_counts = rng.integers(50, 400, flc.n_clients).astype(np.float32)
 
     with mesh:
-        params, _ = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
-        from repro.optim import make_optimizer
-        opt = make_optimizer(args.opt)
-        opt_state = opt.init(params)
+        backend = fl.GradientBackend(
+            cfg, strategy, mesh, rules, opt_name=args.opt, lr=args.lr,
+            batch=args.batch, seq=args.seq, microbatches=args.micro,
+            seed=args.seed, sample_counts=sample_counts, onu_ids=onu_ids)
         step0 = 0
         if args.ckpt:
             last = latest_step(args.ckpt)
             if last is not None:
-                (params, opt_state), extra, step0 = restore_checkpoint(
-                    args.ckpt, last, (params, opt_state))
+                (backend.params, backend.opt_state), extra, step0 = \
+                    restore_checkpoint(args.ckpt, last,
+                                       (backend.params, backend.opt_state))
                 print(f"[restore] resumed from step {step0}")
 
-        train_step = jax.jit(S.make_train_step(cfg, rules, args.opt, args.lr,
-                                               args.micro))
-
-        for step in range(step0, args.steps):
-            # --- the paper's per-round client machinery ---
-            sel = selection.select_clients(rng, pon.n_clients, args.batch)
-            rt = round_times(pon, rng, sel, onu_ids, sample_counts,
-                             args.mode)
-            weights = sample_counts[sel] * rt["involved"]
-            batch_np = next(lm_data.lm_batches(
-                args.seed * 1000 + step, 1, args.batch, args.seq, cfg.vocab_size))
-            batch = {
-                "tokens": jnp.asarray(batch_np["tokens"]),
-                "client_weight": jnp.asarray(weights, jnp.float32),
-            }
-            t0 = time.time()
-            params, opt_state, loss = train_step(params, opt_state, batch)
+        def on_round(loop, rec):
+            step = rec["round"]
             if step % args.log_every == 0 or step == args.steps - 1:
-                print(f"step {step:5d} loss {float(loss):.4f} "
-                      f"involved {int(rt['involved'].sum())}/{len(sel)} "
-                      f"upstream {rt['upstream_mbits']:.0f} Mb "
-                      f"dt {time.time()-t0:.2f}s")
+                print(f"step {step:5d} loss {rec['loss']:.4f} "
+                      f"involved {int(rec['involved'])}/{rec['n_selected']} "
+                      f"upstream {rec['upstream_mbits']:.0f} Mb "
+                      f"dt {rec['dt']:.2f}s")
             if args.ckpt and (step + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt, step + 1, (params, opt_state))
+                save_checkpoint(args.ckpt, step + 1,
+                                (backend.params, backend.opt_state))
+
+        loop = fl.RoundLoop(exp, backend, callbacks=[on_round])
+        loop.run(args.steps, start_round=step0)
         if args.ckpt:
-            save_checkpoint(args.ckpt, args.steps, (params, opt_state))
+            save_checkpoint(args.ckpt, args.steps,
+                            (backend.params, backend.opt_state))
             print(f"[ckpt] saved final at step {args.steps}")
 
 

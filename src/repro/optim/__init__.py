@@ -1,11 +1,13 @@
 from repro.optim.optimizers import (
     sgd_init, sgd_update,
     adamw_init, adamw_update,
+    yogi_init, yogi_update,
     make_optimizer,
     cosine_lr,
 )
 
 __all__ = [
     "sgd_init", "sgd_update", "adamw_init", "adamw_update",
+    "yogi_init", "yogi_update",
     "make_optimizer", "cosine_lr",
 ]

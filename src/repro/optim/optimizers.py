@@ -87,6 +87,42 @@ def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
              "t": t})
 
 
+# --- Yogi ----------------------------------------------------------------
+
+def yogi_init(params):
+    return adamw_init(params)
+
+
+def yogi_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-3,
+                weight_decay: float = 0.0):
+    """Yogi (Zaheer et al. 2018) — the FedYogi server rule in Reddi et al.
+
+    Differs from Adam only in the second-moment update: additive with a
+    sign, v ← v − (1−b2)·sign(v − g²)·g², so v can shrink at a controlled
+    rate when the pseudo-gradient variance drops between rounds.
+    """
+    t = state["t"] + 1
+    bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf)
+        m = b1 * m + (1 - b1) * gf
+        v = v - (1 - b2) * jnp.sign(v - g2) * g2
+        step = (m / bc1) / (jnp.sqrt(jnp.maximum(v, 0.0) / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda o: o[0], out, is_leaf=is3),
+            {"m": jax.tree.map(lambda o: o[1], out, is_leaf=is3),
+             "v": jax.tree.map(lambda o: o[2], out, is_leaf=is3),
+             "t": t})
+
+
 # --- dispatcher ----------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -113,4 +149,9 @@ def make_optimizer(name: str, momentum: float = 0.9,
             "adamw",
             adamw_init,
             lambda p, g, s, lr: adamw_update(p, g, s, lr, weight_decay=weight_decay))
+    if name == "yogi":
+        return Optimizer(
+            "yogi",
+            yogi_init,
+            lambda p, g, s, lr: yogi_update(p, g, s, lr, weight_decay=weight_decay))
     raise ValueError(name)
