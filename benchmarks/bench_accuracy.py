@@ -52,7 +52,11 @@ def run(n_rounds: int = 30, n_selected: int = 128, full: bool = False,
     results = {}
     for mode in modes:
         # per-mode knob filter: the baseline in a comparison run must not
-        # absorb another strategy's kwargs (e.g. fedopt's server_lr)
+        # absorb another strategy's kwargs (e.g. fedopt's server_lr).
+        # Draws stay PAIRED across modes even under --p-crash: the crash
+        # component depends only on the failure seed (same per mode), both
+        # modes exclude the same clients BEFORE transport, so the
+        # selection/wireless streams stay in lockstep (DESIGN.md §11).
         skw = fl.filter_strategy_kwargs(mode, strategy_kwargs)
         strategy = fl.make_strategy(mode, **skw)
         params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(seed))

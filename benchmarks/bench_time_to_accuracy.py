@@ -1,0 +1,166 @@
+"""Simulated seconds to target accuracy — sync vs semi_sync vs fedbuff.
+
+Rounds are the wrong axis once aggregation is deadline-flexible: an async
+policy applies more (smaller, staler) server updates per simulated second,
+a synchronous one fewer but fresher — so this bench runs every policy for
+the SAME simulated wall-clock budget (``--rounds`` × the PON deadline, or
+``--sim-s``) through the ``repro.runtime.Orchestrator`` and reports, per
+(policy × strategy) cell, the accuracy trajectory against simulated time:
+
+  * ``t_to_target_s`` — first simulated second the eval accuracy reached
+    ``--target-acc`` (NaN if never inside the budget);
+  * ``final_acc`` / ``n_updates`` / ``upstream_gbits`` at the budget.
+
+The interesting regimes are the degraded ones the paper never plots:
+``--bg-load 0.8`` (DBA contention delays uploads → staleness grows) and
+``--p-crash 0.02`` (crashed clients stall sync rounds but only dent the
+async pipeline). SFL vs classical composes with every policy via
+``--strategy`` exactly as in the other benches.
+
+CPU cost: ~seconds per cell at the smoke settings:
+    PYTHONPATH=src python -m benchmarks.bench_time_to_accuracy --rounds 2
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+POLICIES = ("sync", "semi_sync", "fedbuff")
+
+
+def run(rounds: int = 6, sim_s: float = None, target_acc: float = 0.10,
+        n_selected: int = 32, seed: int = 0, modes=("classical", "sfl"),
+        policies=POLICIES, pon=None, overselect: float = 0.0,
+        p_crash: float = 0.0, p_transient: float = 0.0,
+        strategy_kwargs=None, buffer_k: int = 8, concurrency: int = 0,
+        staleness_exp: float = 0.5, onu_gather_s: float = 1.0,
+        window_s: float = None):
+    """One Orchestrator run per (policy × mode) cell at an equal simulated
+    wall-clock budget; returns machine-readable rows.
+
+    The budget is floored to a whole number of aggregation windows: the
+    windowed policies can only aggregate at window boundaries, so a
+    fractional tail would be simulated seconds only fedbuff could use —
+    an unequal comparison.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs, fl, runtime
+    from repro.core.fedavg import FLConfig
+    from repro.data import femnist
+    from repro.models import femnist_cnn
+    from repro.pon import PonConfig
+
+    cfg = configs.get("femnist_cnn").reduced()
+    if pon is None:
+        pon = PonConfig()
+    flc = FLConfig(n_onus=pon.n_onus, clients_per_onu=pon.clients_per_onu,
+                   n_selected=n_selected, local_steps=8, local_lr=0.06,
+                   pon=pon)
+    window = window_s if window_s is not None else pon.sync_threshold_s
+    budget_s = sim_s if sim_s is not None else rounds * window
+    budget_s = max(window, (budget_s // window) * window)
+    data_cfg = femnist.FemnistConfig(n_clients=flc.n_clients, seed=seed + 7)
+    clients, eval_set = femnist.generate(data_cfg)
+    eval_batch = jax.tree.map(jnp.asarray, eval_set)
+    counts = femnist.sample_counts(clients)
+
+    rows = []
+    for mode in modes:
+        skw = fl.filter_strategy_kwargs(mode, strategy_kwargs)
+        for policy in policies:
+            strategy = fl.make_strategy(mode, **skw)
+            params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(seed))
+            backend = fl.ClientStackedBackend(
+                flc, strategy, params, clients, eval_batch,
+                femnist_cnn.loss_fn, sample_counts=counts)
+            exp = fl.ExperimentConfig(
+                fl=flc, strategy=fl.canonical_name(mode),
+                strategy_kwargs=tuple(sorted(skw.items())),
+                overselect=overselect, p_crash=p_crash,
+                p_transient=p_transient, seed=seed,
+                policy=policy, buffer_k=buffer_k, concurrency=concurrency,
+                staleness_exponent=staleness_exp, onu_gather_s=onu_gather_s,
+                round_window_s=window_s)
+            t0 = time.time()
+            # n_updates is uncapped (budget-bound): 10k updates >> any
+            # budget a CPU bench will see
+            orch = runtime.Orchestrator(exp, backend)
+            hist = orch.run(n_updates=10_000, until_s=budget_s)
+            accs = [(r["t_s"], r["acc"]) for r in hist if "acc" in r]
+            hit = next((t for t, a in accs if a >= target_acc), None)
+            rows.append({
+                "policy": policy, "mode": fl.canonical_name(mode),
+                "budget_s": float(budget_s), "target_acc": float(target_acc),
+                "t_to_target_s": float(hit) if hit is not None
+                                  else float("nan"),
+                "final_acc": float(accs[-1][1]) if accs else 0.0,
+                # actual server-model updates, not History rows (a
+                # semi_sync window with zero arrivals emits a row but
+                # leaves the model — and "version" — untouched)
+                "n_updates": int(hist.last().get("version", 0)) if len(hist)
+                             else 0,
+                "involved_mean": float(np.mean(hist.column("involved", 0.0)))
+                                 if len(hist) else 0.0,
+                "staleness_mean": float(np.mean(
+                    hist.column("staleness_mean", 0.0))) if len(hist) else 0.0,
+                # the orchestrator's monotonic counter, not the row sum —
+                # async bits served after the last server update would
+                # otherwise be dropped
+                "upstream_gbits": float(orch.total_upstream_mbits / 1e3),
+                "wall_s": time.time() - t0,
+            })
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    import json
+
+    from repro import fl
+    from repro.pon import pon_config_from_args
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="budget in deadline-windows (budget_s = rounds × 25 s)")
+    ap.add_argument("--sim-s", type=float, default=None,
+                    help="explicit simulated wall-clock budget (overrides "
+                         "--rounds)")
+    ap.add_argument("--target-acc", type=float, default=0.10)
+    ap.add_argument("--n-selected", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write rows as {'time_to_accuracy': [...]} JSON")
+    fl.add_experiment_cli_args(ap)
+    args = ap.parse_args(argv)
+
+    rows = run(rounds=args.rounds, sim_s=args.sim_s,
+               target_acc=args.target_acc, n_selected=args.n_selected,
+               seed=args.seed, modes=fl.comparison_modes(args.strategy),
+               pon=pon_config_from_args(args), overselect=args.overselect,
+               p_crash=args.p_crash, p_transient=args.p_transient,
+               strategy_kwargs=fl.strategy_kwargs_from_args(args),
+               buffer_k=args.buffer_k, concurrency=args.concurrency,
+               staleness_exp=args.staleness_exp,
+               onu_gather_s=args.onu_gather_s, window_s=args.window_s)
+
+    print(f"bench_time_to_accuracy (budget {rows[0]['budget_s']:.0f} sim-s, "
+          f"target acc {rows[0]['target_acc']:.2f})")
+    print("policy,mode,t_to_target_s,final_acc,n_updates,involved_mean,"
+          "staleness_mean,upstream_gbits")
+    for r in rows:
+        print(f"{r['policy']},{r['mode']},{r['t_to_target_s']:.1f},"
+              f"{r['final_acc']:.3f},{r['n_updates']},"
+              f"{r['involved_mean']:.1f},{r['staleness_mean']:.2f},"
+              f"{r['upstream_gbits']:.2f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"time_to_accuracy": rows}, f, indent=2, default=float)
+        print(f"[json] wrote {len(rows)} rows to {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

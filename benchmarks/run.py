@@ -6,6 +6,8 @@
   involved  — Fig. 2b (involved clients under the 25 s deadline)
   accuracy  — Fig. 2c (FedAvg accuracy, any registered repro.fl strategy)
   dba       — DBA policy × wavelengths × background-load sweep (beyond-paper)
+  time_to_accuracy — simulated-seconds-to-target, sync vs semi_sync vs
+              fedbuff through the repro.runtime Orchestrator (beyond-paper)
   kernels   — ONU-AF / quantize micro-bench
   report    — EXPERIMENTS tables from results/dryrun/*.json (if present)
 
@@ -24,7 +26,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="upstream|involved|accuracy|dba|kernels|report")
+                    help="upstream|involved|accuracy|dba|time_to_accuracy|"
+                         "kernels|report")
     ap.add_argument("--full", action="store_true",
                     help="accuracy bench with the full LEAF CNN (slow)")
     ap.add_argument("--rounds", type=int, default=None,
@@ -34,11 +37,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_dba, bench_involved,
-                            bench_kernels, bench_upstream, report)
+                            bench_kernels, bench_time_to_accuracy,
+                            bench_upstream, report)
 
     acc_argv = []
+    tta_argv = []
     if args.rounds is not None:
         acc_argv += ["--rounds", str(args.rounds)]
+        tta_argv += ["--rounds", str(args.rounds)]
     if args.full:
         acc_argv += ["--full"]
 
@@ -48,6 +54,7 @@ def main() -> None:
         "dba": lambda: bench_dba.main([]),
         "kernels": bench_kernels.main,
         "accuracy": lambda: bench_accuracy.main(acc_argv),
+        "time_to_accuracy": lambda: bench_time_to_accuracy.main(tta_argv),
     }
     names = [args.only] if args.only else list(benches)
     collected = {}

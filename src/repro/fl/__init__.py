@@ -31,7 +31,7 @@ from repro.fl.config import (
     filter_strategy_kwargs,
     strategy_kwargs_from_args,
 )
-from repro.fl.loop import History, RoundLoop
+from repro.fl.loop import History, RoundLoop, replay_sync_round, sync_round
 from repro.fl.backends import (
     ClientStackedBackend,
     GradientBackend,
@@ -44,6 +44,6 @@ __all__ = [
     "ExperimentConfig", "add_experiment_cli_args", "comparison_modes",
     "experiment_config_from_args", "filter_strategy_kwargs",
     "strategy_kwargs_from_args",
-    "History", "RoundLoop",
+    "History", "RoundLoop", "replay_sync_round", "sync_round",
     "ClientStackedBackend", "GradientBackend", "TransportBackend",
 ]

@@ -17,6 +17,20 @@ owns selection, failures, and PON transport. Contract:
     flat) is picked by the sharding rules from ``strategy.transport``.
   * ``TransportBackend``     — no learning at all; for transport-only
     sweeps (DBA policies, wavelengths, background load).
+
+Two optional extensions (implemented by ClientStacked/Transport, used by
+``repro.runtime``):
+
+    backend.replay_round(rnd, selected, mask, rt, rng)
+        — consume exactly run_round's RNG draws without training, so a
+          resumed run can fast-forward the stream (RoundLoop resume).
+    backend.client_update(client, rng) -> (delta, weight)
+    backend.apply_updates(rnd, clients, deltas, weights) -> metrics
+        — the asynchronous seam: one client trains eagerly against the
+          CURRENT params at dispatch time (download → H local steps; the
+          math is clock-free, only the transport is simulated), and a
+          buffer of possibly-stale deltas is later folded into the server
+          with staleness-discounted weights (semi_sync / fedbuff policies).
 """
 from __future__ import annotations
 
@@ -56,6 +70,7 @@ class ClientStackedBackend:
         self.onu_ids = onu_ids if onu_ids is not None else fedavg.onu_of_client(fl)
         self.minibatch_fn = minibatch_fn
         self._last_eval: Dict[str, float] = {}
+        self._one_client = None     # lazily-jitted single-client update
 
     def _eval(self) -> Dict[str, float]:
         loss, metrics = self.loss_fn(self.params, self.eval_batch)
@@ -64,14 +79,34 @@ class ClientStackedBackend:
         self._last_eval = out
         return out
 
+    def _idle_metrics(self) -> Dict[str, float]:
+        """No update this round — carry the last eval forward."""
+        return dict(self._last_eval) if self._last_eval else {"acc": 0.0}
+
+    def _apply_and_eval(self, rnd: int, stacked, weights, mask, onu_ids
+                        ) -> Dict[str, float]:
+        """Shared tail of both regimes: strategy aggregate → server update
+        → uplink stats + eval cadence (any change here changes the sync
+        run_round and the async apply_updates together)."""
+        agg, stats = self.strategy.aggregate(stacked, weights, mask, onu_ids,
+                                             self.fl.n_onus)
+        self.params, self.server_state = self.strategy.server_update(
+            self.params, agg, self.server_state)
+        out = {"uplink_models": float(stats["uplink_models"])}
+        if (rnd + 1) % self.eval_every == 0:
+            out.update(self._eval())
+        elif self._last_eval:
+            out.update(self._last_eval)
+        return out
+
     def run_round(self, rnd: int, selected: np.ndarray, mask: np.ndarray,
                   rt: Dict[str, Any], rng: np.random.Generator
                   ) -> Dict[str, float]:
         fl = self.fl
         active = selected[mask > 0]
         if len(active) == 0:
-            # nothing beat the deadline — carry the last eval forward
-            return dict(self._last_eval) if self._last_eval else {"acc": 0.0}
+            # nothing beat the deadline
+            return self._idle_metrics()
         # pad to a chunk multiple with weight-0 dummies: keeps the vmap
         # shapes constant across rounds (one jit compile total)
         pad = (-len(active)) % fl.client_chunk
@@ -84,18 +119,64 @@ class ClientStackedBackend:
         deltas, _ = fedavg.train_selected_clients(
             self.params, cb, self.loss_fn, fl,
             local_update=self.strategy.local_update)
-        agg, stats = self.strategy.aggregate(
-            deltas, jnp.asarray(w),
+        return self._apply_and_eval(
+            rnd, deltas, jnp.asarray(w),
             jnp.concatenate([jnp.ones(len(active)), jnp.zeros(pad)]),
-            jnp.asarray(self.onu_ids[padded]), fl.n_onus)
-        self.params, self.server_state = self.strategy.server_update(
-            self.params, agg, self.server_state)
-        out = {"uplink_models": float(stats["uplink_models"])}
-        if (rnd + 1) % self.eval_every == 0:
-            out.update(self._eval())
-        elif self._last_eval:
-            out.update(self._last_eval)
-        return out
+            jnp.asarray(self.onu_ids[padded]))
+
+    def replay_round(self, rnd: int, selected: np.ndarray, mask: np.ndarray,
+                     rt: Dict[str, Any], rng: np.random.Generator) -> None:
+        """Consume run_round's minibatch draws without training (resume
+        fast-forward — must mirror run_round's rng consumption exactly)."""
+        fl = self.fl
+        active = selected[mask > 0]
+        if len(active) == 0:
+            return
+        pad = (-len(active)) % fl.client_chunk
+        padded = np.concatenate([active, np.full(pad, active[0])])
+        for c in padded:
+            self.minibatch_fn(rng, self.clients[c], fl.local_steps,
+                              fl.local_batch)
+
+    # --- asynchronous seam (repro.runtime semi_sync / fedbuff) -----------
+
+    def client_update(self, client: int, rng: np.random.Generator):
+        """One client's eager local update against the CURRENT params.
+
+        Dispatch-time semantics: the client downloads the global model the
+        moment the server selects it, trains H local steps, and the
+        resulting delta rides the simulated PON — so by arrival time the
+        server may have moved on (staleness), which is exactly the regime
+        the async policies weight for.
+        """
+        fl = self.fl
+        batches = jax.tree.map(
+            jnp.asarray,
+            self.minibatch_fn(rng, self.clients[client], fl.local_steps,
+                              fl.local_batch))
+        if self._one_client is None:
+            strategy, loss_fn = self.strategy, self.loss_fn
+            self._one_client = jax.jit(
+                lambda p, b: strategy.local_update(p, b, loss_fn, fl))
+        delta, _ = self._one_client(self.params, batches)
+        return delta, float(self.sample_counts[client])
+
+    def apply_updates(self, rnd: int, clients, deltas, weights
+                      ) -> Dict[str, float]:
+        """Fold a buffer of (possibly stale) client deltas into the server.
+
+        ``weights`` arrive already staleness-discounted by the policy; the
+        strategy's weighted-mean aggregate and server_update (plain apply,
+        or the fedopt AdamW/Yogi state) do the rest.
+        """
+        if len(deltas) == 0:
+            return self._idle_metrics()
+        clients = np.asarray(clients)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        return self._apply_and_eval(
+            rnd, stacked, jnp.asarray(np.asarray(weights, np.float32)),
+            jnp.ones(len(deltas), jnp.float32),
+            jnp.asarray(self.onu_ids[clients]))
 
 
 class GradientBackend:
@@ -168,7 +249,11 @@ class GradientBackend:
 
 
 class TransportBackend:
-    """Transport-only: the RoundLoop records involvement/upstream, no model."""
+    """Transport-only: the driver records involvement/upstream, no model.
+
+    Implements the async seam trivially (no deltas) so the runtime's
+    semi_sync/fedbuff policies can run pure scheduling sweeps too.
+    """
 
     def __init__(self, strategy: Strategy, sample_counts: np.ndarray,
                  onu_ids: np.ndarray):
@@ -177,4 +262,10 @@ class TransportBackend:
         self.onu_ids = onu_ids
 
     def run_round(self, rnd, selected, mask, rt, rng) -> Dict[str, float]:
+        return {}
+
+    def client_update(self, client: int, rng):
+        return None, float(self.sample_counts[client])
+
+    def apply_updates(self, rnd, clients, deltas, weights) -> Dict[str, float]:
         return {}

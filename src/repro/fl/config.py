@@ -38,6 +38,15 @@ class ExperimentConfig:
     # driver (eval cadence is a backend knob: ClientStackedBackend(eval_every=…))
     n_rounds: int = 30
     seed: int = 0
+    # event-driven runtime (repro.runtime.Orchestrator) — ignored by the
+    # lockstep RoundLoop driver
+    policy: str = "sync"              # sync | semi_sync | fedbuff
+    round_window_s: Optional[float] = None  # aggregation window (default:
+                                            # the PON deadline)
+    buffer_k: int = 8                 # fedbuff: server update every K arrivals
+    concurrency: int = 0              # fedbuff in-flight clients (0: n_selected)
+    staleness_exponent: float = 0.5   # weight ∝ (1+τ)^-α (FedBuff's 1/√(1+τ))
+    onu_gather_s: float = 1.0         # async SFL: ONU θ gather window (s)
 
     def make_strategy(self) -> Strategy:
         return make_strategy(self.strategy, **dict(self.strategy_kwargs))
@@ -88,6 +97,21 @@ def add_experiment_cli_args(ap, strategy_default: str = "sfl_two_step") -> None:
                    help="fedopt server optimizer: adamw|yogi|sgd|sgdm")
     g.add_argument("--server-lr", type=float, default=None,
                    help="fedopt server learning rate (default: strategy's)")
+    r = ap.add_argument_group("event-driven runtime (repro.runtime)")
+    r.add_argument("--policy", default="sync",
+                   help="aggregation policy for the Orchestrator driver: "
+                        "sync|semi_sync|fedbuff (alias: async)")
+    r.add_argument("--window-s", type=float, default=None,
+                   help="aggregation window seconds (default: PON deadline)")
+    r.add_argument("--buffer-k", type=int, default=8,
+                   help="fedbuff: apply a server update every K arrivals")
+    r.add_argument("--concurrency", type=int, default=0,
+                   help="fedbuff: clients kept in flight (0: n_selected)")
+    r.add_argument("--staleness-exp", type=float, default=0.5,
+                   help="staleness discount α: weight ∝ (1+τ)^-α")
+    r.add_argument("--onu-gather-s", type=float, default=1.0,
+                   help="async SFL: seconds an ONU gathers arrivals "
+                        "before emitting one θ")
 
 
 def strategy_kwargs_from_args(args) -> dict:
@@ -141,4 +165,11 @@ def experiment_config_from_args(args, **overrides) -> ExperimentConfig:
         fl=fl, strategy=name, strategy_kwargs=tuple(sorted(skw.items())),
         overselect=args.overselect, p_crash=args.p_crash,
         p_transient=args.p_transient,
-        seed=getattr(args, "seed", 0), **overrides)
+        seed=getattr(args, "seed", 0),
+        policy=getattr(args, "policy", "sync"),
+        round_window_s=getattr(args, "window_s", None),
+        buffer_k=getattr(args, "buffer_k", 8),
+        concurrency=getattr(args, "concurrency", 0),
+        staleness_exponent=getattr(args, "staleness_exp", 0.5),
+        onu_gather_s=getattr(args, "onu_gather_s", 1.0),
+        **overrides)

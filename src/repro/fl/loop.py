@@ -2,25 +2,30 @@
 
 Every federated run in this repo is the same five-stage round:
 
-    selection (N + overselect backups) → failure injection (FailureModel)
-    → PON transport (event simulator → involvement mask) → backend
-    training + strategy aggregation → eval/metrics sink
+    selection (N + overselect backups) → crash injection (FailureModel)
+    → PON transport (event simulator → involvement mask) → transient mask
+    → backend training + strategy aggregation → eval/metrics sink
 
 This used to be re-implemented in four places (core/fedavg callers,
 launch/train.py, bench_accuracy, the example) with the strategy hard-coded
-as a mode string; RoundLoop owns it once. Benchmarks consume the History
-sink instead of hand-rolled loops; drivers attach callbacks (logging,
-checkpointing) instead of editing the loop.
+as a mode string; :func:`sync_round` owns it once, and both drivers — the
+lockstep ``RoundLoop`` here and the event-driven
+``repro.runtime.Orchestrator``'s ``sync`` policy — call it, which is what
+makes their trajectories bit-for-bit identical.
 
-The mask path is where fault tolerance composes: the PON deadline mask,
-the synthetic FailureModel, and over-selection backups all meet in one
-(selected,)-shaped involvement vector — the paper's own straggler-drop
-renormalization handles the rest (DESIGN.md §7).
+Failure ordering matters (DESIGN.md §11): the *crash* component of the
+FailureModel is injected BEFORE transport, so a crashed client never
+reaches the PON edge — it contributes zero upstream Mbits, never occupies
+a wavelength grant, and cannot delay its ONU's θ. *Transient* slowness
+stays a transport-side phenomenon: the client transmits (and is billed)
+but its update is discarded by the aggregation mask. The PON deadline
+mask, the crash/transient components, and over-selection backups all meet
+in one (selected,)-shaped involvement vector — the paper's own
+straggler-drop renormalization handles the rest (DESIGN.md §7).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -52,7 +57,98 @@ class History:
         return iter(self.records)
 
 
-Callback = Callable[["RoundLoop", Dict[str, Any]], None]
+Callback = Callable[[Any, Dict[str, Any]], None]
+
+
+def _expand_rt(rt: Dict[str, Any], live: np.ndarray) -> Dict[str, Any]:
+    """Re-align per-client transport arrays from the live (non-crashed)
+    subset back to the full selection: crashed clients never completed
+    (``t_done``/``ready`` = inf, ``involved`` = 0)."""
+    out = dict(rt)
+    n = len(live)
+    inv = np.zeros(n, np.float32)
+    inv[live] = np.asarray(rt["involved"], np.float32)
+    out["involved"] = inv
+    for key in ("t_done", "ready"):
+        if key in rt:
+            arr = np.full(n, np.inf)
+            arr[live] = np.asarray(rt[key], np.float64)
+            out[key] = arr
+    return out
+
+
+def _transport_stage(cfg: ExperimentConfig, backend, failures,
+                     rng: np.random.Generator, rnd: int
+                     ) -> Tuple[np.ndarray, np.ndarray, Dict[str, Any]]:
+    """selection → crash injection → PON transport → transient mask.
+
+    Returns ``(selected, mask, rt)`` with ``mask``/``rt`` arrays shaped to
+    the full selection. Consumes the shared rng in a fixed order (selection
+    draw, then transport draws for the *live* clients) — the replay path
+    must mirror this exactly.
+    """
+    fl = cfg.fl
+    sel = selection.select_clients(rng, fl.n_clients, fl.n_selected,
+                                   cfg.overselect)
+    crash_alive = transient_alive = None
+    if failures is not None:
+        crash_alive, transient_alive = failures.step_components(rnd,
+                                                                fl.n_clients)
+    live = (crash_alive[sel] if crash_alive is not None
+            else np.ones(len(sel), bool))
+    rt = round_times(fl.pon_config(), rng, sel[live], backend.onu_ids,
+                     backend.sample_counts, backend.strategy.transport)
+    if not live.all():
+        rt = _expand_rt(rt, live)
+    mask = np.asarray(rt["involved"], np.float32)
+    if transient_alive is not None:
+        mask = mask * transient_alive[sel].astype(np.float32)
+    return sel, mask, rt
+
+
+def sync_round(cfg: ExperimentConfig, backend, failures,
+               rng: np.random.Generator, rnd: int) -> Dict[str, Any]:
+    """One synchronous deadline round; returns the History record.
+
+    The shared round pipeline behind both drivers (``RoundLoop`` and the
+    Orchestrator's ``sync`` policy) — any change here changes both, which
+    keeps them bit-for-bit interchangeable by construction.
+    """
+    sel, mask, rt = _transport_stage(cfg, backend, failures, rng, rnd)
+    metrics = backend.run_round(rnd, sel, mask, rt, rng)
+    rec = {"round": rnd, "n_selected": len(sel),
+           "involved": float(mask.sum()),
+           "upstream_mbits": float(rt["upstream_mbits"])}
+    rec.update(metrics)
+    return rec
+
+
+def replay_sync_round(cfg: ExperimentConfig, backend, failures,
+                      rng: np.random.Generator, rnd: int) -> None:
+    """Consume exactly :func:`sync_round`'s RNG draws without training.
+
+    Fast-forwards a resumed run: replaying the selection/transport draws
+    (and, via the backend's optional ``replay_round`` hook, its minibatch
+    draws) for the skipped rounds leaves the rng stream — and the stateful
+    FailureModel — in the identical state an uninterrupted run would have
+    reached, so resumed and uninterrupted trajectories match bit for bit.
+    """
+    sel, mask, rt = _transport_stage(cfg, backend, failures, rng, rnd)
+    replay = getattr(backend, "replay_round", None)
+    if replay is not None:
+        replay(rnd, sel, mask, rt, rng)
+
+
+def fast_forward(cfg: ExperimentConfig, backend, failures,
+                 rng: np.random.Generator, consumed: int, start_round: int
+                 ) -> int:
+    """Replay rounds ``[consumed, start_round)``; returns the new consumed
+    count. The single resume path shared by both drivers (RoundLoop and
+    the Orchestrator's sync policy) so their replay semantics cannot
+    drift."""
+    for rnd in range(consumed, start_round):
+        replay_sync_round(cfg, backend, failures, rng, rnd)
+    return max(consumed, start_round)
 
 
 class RoundLoop:
@@ -62,7 +158,9 @@ class RoundLoop:
     consumed in a fixed order (selection draw, transport draws, minibatch
     draws) — with ``overselect=0`` and no failure model this reproduces the
     pre-refactor drivers bit for bit. The FailureModel keeps its own RNG so
-    enabling it does not perturb the learning stream.
+    enabling it does not perturb the selection/minibatch stream (crash
+    injection does change *which* clients reach the transport, so the
+    wireless draws shift — that is physics, not bookkeeping).
     """
 
     def __init__(self, cfg: ExperimentConfig, backend,
@@ -73,6 +171,7 @@ class RoundLoop:
         self.rng = np.random.default_rng(cfg.seed)
         self.failures = cfg.make_failure_model()
         self.history = History()
+        self.rounds_consumed = 0    # rounds whose RNG draws have been used
         n = cfg.fl.n_clients
         if len(backend.sample_counts) < n or len(backend.onu_ids) < n:
             raise ValueError(
@@ -86,20 +185,8 @@ class RoundLoop:
         return self.backend.strategy
 
     def run_round(self, rnd: int) -> Dict[str, Any]:
-        cfg, fl = self.cfg, self.cfg.fl
-        sel = selection.select_clients(self.rng, fl.n_clients, fl.n_selected,
-                                       cfg.overselect)
-        rt = round_times(fl.pon_config(), self.rng, sel, self.backend.onu_ids,
-                         self.backend.sample_counts, self.strategy.transport)
-        mask = np.asarray(rt["involved"], np.float32)
-        if self.failures is not None:
-            alive = self.failures.step(rnd, fl.n_clients)
-            mask = mask * alive[sel].astype(np.float32)
-        metrics = self.backend.run_round(rnd, sel, mask, rt, self.rng)
-        rec = {"round": rnd, "n_selected": len(sel),
-               "involved": float(mask.sum()),
-               "upstream_mbits": float(rt["upstream_mbits"])}
-        rec.update(metrics)
+        rec = sync_round(self.cfg, self.backend, self.failures, self.rng, rnd)
+        self.rounds_consumed += 1
         self.history.append(rec)
         for cb in self.callbacks:
             cb(self, rec)
@@ -107,7 +194,21 @@ class RoundLoop:
 
     def run(self, n_rounds: Optional[int] = None, start_round: int = 0
             ) -> History:
+        """Run ``n_rounds`` rounds (a COUNT, not an end index) from
+        ``start_round``.
+
+        ``run(5, start_round=5)`` therefore trains rounds 5..9 — a resumed
+        driver asks for "the remaining rounds", not "rounds up to N" (the
+        old conflation silently trained fewer rounds on resume,
+        launch/train.py:102). When resuming on a fresh loop, the rounds
+        before ``start_round`` are fast-forwarded by replaying their
+        selection/transport/minibatch draws so the resumed trajectory is
+        bit-for-bit the uninterrupted one (tests/test_runtime.py).
+        """
         n = n_rounds if n_rounds is not None else self.cfg.n_rounds
-        for rnd in range(start_round, n):
+        self.rounds_consumed = fast_forward(self.cfg, self.backend,
+                                            self.failures, self.rng,
+                                            self.rounds_consumed, start_round)
+        for rnd in range(start_round, start_round + n):
             self.run_round(rnd)
         return self.history

@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--driver", choices=("loop", "runtime"), default="loop",
+                    help="round driver: the lockstep RoundLoop or the "
+                         "event-driven runtime Orchestrator (--policy picks "
+                         "the aggregation policy; GradientBackend is "
+                         "sync-only)")
     # strategy / PON transport / fault-tolerance knobs — the shared
     # repro.fl flag set (also on bench_accuracy and the examples)
     fl.add_experiment_cli_args(ap)
@@ -90,16 +95,26 @@ def main():
         def on_round(loop, rec):
             step = rec["round"]
             if step % args.log_every == 0 or step == args.steps - 1:
+                sim = f" t_sim {rec['t_s']:.0f}s" if "t_s" in rec else ""
                 print(f"step {step:5d} loss {rec['loss']:.4f} "
                       f"involved {int(rec['involved'])}/{rec['n_selected']} "
                       f"upstream {rec['upstream_mbits']:.0f} Mb "
-                      f"dt {rec['dt']:.2f}s")
+                      f"dt {rec['dt']:.2f}s{sim}")
             if args.ckpt and (step + 1) % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt, step + 1,
                                 (backend.params, backend.opt_state))
 
-        loop = fl.RoundLoop(exp, backend, callbacks=[on_round])
-        loop.run(args.steps, start_round=step0)
+        # n_rounds is a COUNT: a resumed run asks for the REMAINING rounds,
+        # and the driver replays the skipped rounds' RNG draws so the
+        # resumed trajectory is bit-for-bit the uninterrupted one
+        remaining = max(0, args.steps - step0)
+        if args.driver == "runtime":
+            from repro import runtime
+            orch = runtime.Orchestrator(exp, backend, callbacks=[on_round])
+            orch.run(remaining, start_round=step0)
+        else:
+            loop = fl.RoundLoop(exp, backend, callbacks=[on_round])
+            loop.run(remaining, start_round=step0)
         if args.ckpt:
             save_checkpoint(args.ckpt, args.steps,
                             (backend.params, backend.opt_state))

@@ -72,60 +72,115 @@ class UpstreamJob:
     grant_idx: int = -1
 
 
+class UpstreamSim:
+    """Incremental event-driven upstream: submit jobs over time, advance.
+
+    The same grant machine as the batch :func:`simulate_upstream` (which is
+    now a thin wrapper over this class), exposed incrementally so a live
+    runtime (``repro.runtime.Orchestrator``) can feed uploads as simulated
+    wall-clock events instead of per-round batches. Because grants are
+    non-preemptive and a decision at time *t* only ever considers jobs with
+    ``ready_s <= t``, submitting a job any time at or before its ready time
+    yields the exact schedule — float for float — that the batch call
+    produces for the same job set.
+
+    ``on_done`` (optional) fires once per job at its completion event, in
+    completion order, while :meth:`advance_to` is draining.
+    """
+
+    def __init__(self, topology: Topology, dba: DbaPolicy,
+                 on_done=None):
+        self.topology = topology
+        self.dba = dba
+        self.on_done = on_done
+        dba.reset(topology)
+        self._onu_wl = {o.id: frozenset(o.reachable(topology))
+                        for o in topology.onus}
+        self._ctr = itertools.count()
+        self._events: list = []
+        self._free = set(range(topology.n_wavelengths))
+        self._onu_busy: set = set()
+        self._pending: List[UpstreamJob] = []
+        self._grant_idx = itertools.count()
+        self.now = 0.0
+
+    def submit(self, job: UpstreamJob) -> None:
+        """Enqueue one upstream job (must be no later than its ready time)."""
+        job.start_s, job.done_s, job.wavelength, job.grant_idx = (
+            math.inf, math.inf, -1, -1)
+        heapq.heappush(self._events, (job.ready_s, next(self._ctr), _READY, job))
+
+    def next_event_s(self) -> Optional[float]:
+        """Time of the next internal event, or None when idle."""
+        return self._events[0][0] if self._events else None
+
+    def _grant(self) -> None:
+        while self._pending and self._free:
+            granted = False
+            for w in sorted(self._free):
+                cands = [j for j in self._pending
+                         if j.onu not in self._onu_busy
+                         and w in self._onu_wl[j.onu]]
+                if not cands:
+                    continue
+                j = self.dba.select(self.now, w, cands)
+                if j is None:
+                    continue
+                j.start_s = self.now if self.now > j.ready_s else j.ready_s
+                j.done_s = j.start_s + j.size_mbits / self.topology.rate_mbps(
+                    j.onu, w)
+                j.wavelength = w
+                j.grant_idx = next(self._grant_idx)
+                heapq.heappush(self._events,
+                               (j.done_s, next(self._ctr), _FREE, (w, j)))
+                self._free.remove(w)
+                self._onu_busy.add(j.onu)
+                self._pending.remove(j)
+                granted = True
+                break
+            if not granted:
+                break
+
+    def advance_to(self, t: float) -> None:
+        """Process every event with time <= ``t`` (granting in between)."""
+        while self._events and self._events[0][0] <= t:
+            self.now = max(self.now, self._events[0][0])
+            completed: List[UpstreamJob] = []
+            while self._events and self._events[0][0] <= self.now:
+                _, _, ev, payload = heapq.heappop(self._events)
+                if ev == _READY:
+                    self._pending.append(payload)
+                else:
+                    w, j = payload
+                    self._free.add(w)
+                    self._onu_busy.discard(j.onu)
+                    completed.append(j)
+            self._grant()
+            if self.on_done is not None:
+                for j in completed:
+                    self.on_done(j)
+        self.now = max(self.now, t)
+
+    def drain(self) -> "UpstreamSim":
+        """Run to quiescence (anything still pending is unservable)."""
+        while self._events:
+            self.advance_to(self._events[0][0])
+        return self
+
+
 def simulate_upstream(jobs: Sequence[UpstreamJob], topology: Topology,
                       dba: DbaPolicy) -> List[UpstreamJob]:
     """Serve ``jobs`` on the topology's wavelengths under the DBA policy.
 
     Mutates and returns the jobs: ``start_s``/``done_s``/``wavelength``/
     ``grant_idx`` are filled for every job the simulator could serve; jobs
-    whose ONU reaches no wavelength stay at +inf.
+    whose ONU reaches no wavelength stay at +inf. Batch wrapper over the
+    incremental :class:`UpstreamSim` (bit-for-bit the original loop).
     """
-    dba.reset(topology)
-    onu_wl = {o.id: frozenset(o.reachable(topology)) for o in topology.onus}
-    ctr = itertools.count()
-    events: list = []
+    sim = UpstreamSim(topology, dba)
     for j in jobs:
-        j.start_s, j.done_s, j.wavelength, j.grant_idx = math.inf, math.inf, -1, -1
-        heapq.heappush(events, (j.ready_s, next(ctr), _READY, j))
-    free = set(range(topology.n_wavelengths))
-    onu_busy: set = set()
-    pending: List[UpstreamJob] = []
-    grant_idx = itertools.count()
-    now = 0.0
-    while True:
-        while events and events[0][0] <= now:
-            _, _, ev, payload = heapq.heappop(events)
-            if ev == _READY:
-                pending.append(payload)
-            else:
-                w, j = payload
-                free.add(w)
-                onu_busy.discard(j.onu)
-        while pending and free:
-            granted = False
-            for w in sorted(free):
-                cands = [j for j in pending
-                         if j.onu not in onu_busy and w in onu_wl[j.onu]]
-                if not cands:
-                    continue
-                j = dba.select(now, w, cands)
-                if j is None:
-                    continue
-                j.start_s = now if now > j.ready_s else j.ready_s
-                j.done_s = j.start_s + j.size_mbits / topology.rate_mbps(j.onu, w)
-                j.wavelength = w
-                j.grant_idx = next(grant_idx)
-                heapq.heappush(events, (j.done_s, next(ctr), _FREE, (w, j)))
-                free.remove(w)
-                onu_busy.add(j.onu)
-                pending.remove(j)
-                granted = True
-                break
-            if not granted:
-                break
-        if not events:
-            break           # anything still pending is unservable
-        now = events[0][0]  # advance; the drain loop pops it next iteration
+        sim.submit(j)
+    sim.drain()
     return list(jobs)
 
 
@@ -235,6 +290,12 @@ def simulate_round(cfg: PonConfig, rng: np.random.Generator,
         "dba": dba.name,
         "n_wavelengths": topology.n_wavelengths,
         "grant_delay_s": float(starts.mean()) if len(starts) else 0.0,
+        # FL jobs submitted to / granted by the DBA this round — crashed
+        # clients are excluded before transport (repro.fl.loop) so they can
+        # never appear here (pinned by tests/test_runtime.py)
+        "n_fl_jobs": len(fl_served),
+        "n_fl_grants": int(sum(1 for j in fl_served
+                               if math.isfinite(j.start_s))),
         "bg_mbits_offered": float(sum(j.size_mbits for j in bg_jobs)),
         "bg_mbits_served": float(sum(j.size_mbits for j in bg_done)),
     }

@@ -1,3 +1,46 @@
-from repro.runtime.failures import FailureModel, MembershipTable, renormalized_weights
+"""repro.runtime — the event-driven federated runtime on the PON clock.
 
-__all__ = ["FailureModel", "MembershipTable", "renormalized_weights"]
+    from repro import fl, runtime
+
+    exp = fl.ExperimentConfig(policy="fedbuff", buffer_k=8)
+    hist = runtime.Orchestrator(exp, backend).run(until_s=500.0)
+
+``SimClock`` is the simulated wall clock; the ``Orchestrator`` schedules
+client dispatch/training/upload lifecycles on it, feeding uploads to the
+incremental PON event simulator; ``policies`` decide when the server
+aggregates (sync deadline rounds, semi-sync straggler carry, fedbuff
+buffered async with staleness weighting). See DESIGN.md §11.
+
+The Orchestrator/policies are loaded lazily (PEP 562): ``repro.fl.config``
+imports this package's ``failures`` module, and the orchestrator imports
+``repro.fl`` back — eager imports here would make that a cycle.
+"""
+from repro.runtime.clock import SimClock
+from repro.runtime.failures import (FailureModel, MembershipTable,
+                                    renormalized_weights)
+
+__all__ = [
+    "FailureModel", "MembershipTable", "renormalized_weights",
+    "SimClock",
+    "Orchestrator",
+    "AggregationPolicy", "ClientUpdate", "make_policy", "canonical_policy",
+    "policy_names", "staleness_weights",
+]
+
+_LAZY = {
+    "Orchestrator": "repro.runtime.orchestrator",
+    "AggregationPolicy": "repro.runtime.policies",
+    "ClientUpdate": "repro.runtime.policies",
+    "make_policy": "repro.runtime.policies",
+    "canonical_policy": "repro.runtime.policies",
+    "policy_names": "repro.runtime.policies",
+    "staleness_weights": "repro.runtime.policies",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -34,22 +34,36 @@ class FailureModel:
         self._rng = np.random.default_rng(self.seed)
         self._down_until: Dict[int, int] = {}
 
-    def step(self, round_idx: int, n_nodes: int) -> np.ndarray:
-        """Returns alive-mask (n_nodes,) for this round."""
-        alive = np.ones(n_nodes, bool)
+    def step_components(self, round_idx: int, n_nodes: int
+                        ) -> "tuple[np.ndarray, np.ndarray]":
+        """Advance one round; returns ``(crash_alive, transient_alive)``.
+
+        The two components have different transport semantics (DESIGN.md
+        §11): a *crashed* node never reaches the PON edge — it must be
+        removed before transport so it is neither billed upstream nor
+        granted a wavelength — while a *transient* failure is a
+        transport-side phenomenon: the client transmits (and is billed) but
+        its update is discarded by the aggregation mask. RNG consumption is
+        identical to the combined :meth:`step`.
+        """
+        crash_alive = np.ones(n_nodes, bool)
         for node, until in list(self._down_until.items()):
             if round_idx >= until:
                 del self._down_until[node]
             else:
-                alive[node] = False
+                crash_alive[node] = False
         crash = self._rng.random(n_nodes) < self.p_crash
         for node in np.where(crash)[0]:
             rec = 1 + self._rng.geometric(1.0 / self.mean_recovery_rounds)
             self._down_until[node] = round_idx + rec
-            alive[node] = False
+            crash_alive[node] = False
         transient = self._rng.random(n_nodes) < self.p_transient
-        alive &= ~transient
-        return alive
+        return crash_alive, ~transient
+
+    def step(self, round_idx: int, n_nodes: int) -> np.ndarray:
+        """Returns the combined alive-mask (n_nodes,) for this round."""
+        crash_alive, transient_alive = self.step_components(round_idx, n_nodes)
+        return crash_alive & transient_alive
 
 
 @dataclasses.dataclass

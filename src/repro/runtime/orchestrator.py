@@ -1,0 +1,259 @@
+"""Orchestrator — the event-driven federated driver on the PON clock.
+
+The second driver beside ``repro.fl.RoundLoop``, behind the same
+``ExperimentConfig`` + backend interfaces:
+
+    from repro import fl, runtime
+    exp = fl.ExperimentConfig(policy="fedbuff", buffer_k=8, n_rounds=20)
+    hist = runtime.Orchestrator(exp, backend).run(until_s=500.0)
+
+Where the RoundLoop runs lockstep rounds (one batched ``round_times`` call
+per round, time implicit), the Orchestrator owns a simulated wall clock
+(``SimClock``) and schedules every client's lifecycle on it: dispatch
+(eager local training at the current model version) → downlink + local
+train + wireless leg → the update reaches the PON edge → an upstream job
+submitted to the *incremental* PON event simulator
+(``repro.pon.events.UpstreamSim``) → grant/completion under the configured
+DBA/TWDM/background-traffic contention → arrival at the OLT, handed to the
+aggregation policy (``repro.runtime.policies``). The PON simulator's
+internal events are bridged onto the same clock, so one heap orders
+everything and "simulated seconds" becomes the measurement axis
+(``benchmarks/bench_time_to_accuracy.py``).
+
+The ``sync`` policy bypasses the continuous machinery and calls the exact
+``repro.fl.loop.sync_round`` pipeline per deadline window — that is the
+degenerate configuration pinned bit-for-bit against RoundLoop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.fl.config import ExperimentConfig
+from repro.fl.loop import Callback, History
+from repro.pon.dba import make_dba
+from repro.pon.events import UpstreamJob, UpstreamSim
+from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, train_times
+from repro.pon.topology import Topology
+from repro.pon.traffic import BackgroundTraffic
+from repro.runtime.clock import SimClock
+from repro.runtime.policies import (AggregationPolicy, ClientUpdate,
+                                    make_policy, staleness_weights)
+
+
+class Orchestrator:
+    """Drives ``cfg`` against a backend on a simulated wall clock."""
+
+    def __init__(self, cfg: ExperimentConfig, backend,
+                 callbacks: Iterable[Callback] = (),
+                 policy: Optional[str] = None):
+        self.cfg = cfg
+        self.backend = backend
+        self.callbacks: List[Callback] = list(callbacks)
+        self.policy: AggregationPolicy = make_policy(
+            policy if policy is not None else cfg.policy)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.failures = cfg.make_failure_model()
+        self.history = History()
+        self.clock = SimClock()
+        self.pon_cfg = cfg.fl.pon_config()
+        self.window_s = (cfg.round_window_s if cfg.round_window_s is not None
+                         else self.pon_cfg.sync_threshold_s)
+        self.server_version = 0
+        self.rounds_consumed = 0        # sync policy: rounds of rng consumed
+        n = cfg.fl.n_clients
+        if len(backend.sample_counts) < n or len(backend.onu_ids) < n:
+            raise ValueError(
+                f"backend covers {len(backend.sample_counts)} clients but "
+                f"cfg.fl.n_clients={n}; size the backend to the FL population")
+        if self.policy.needs_async_backend and not (
+                hasattr(backend, "client_update")
+                and hasattr(backend, "apply_updates")):
+            raise TypeError(
+                f"policy {self.policy.name!r} needs the async backend seam "
+                "(client_update/apply_updates); ClientStackedBackend and "
+                "TransportBackend implement it, GradientBackend is "
+                "sync-only — use policy='sync' or the RoundLoop driver")
+        # continuous-transport state (built by setup_transport for the
+        # async policies; the sync policy never touches it)
+        self._pon: Optional[UpstreamSim] = None
+        self._pon_ev = None
+        self._payload: Dict[int, Any] = {}
+        self._gather: Dict[int, Any] = {}
+        self._jobseq = itertools.count()
+        self._train_s: Optional[np.ndarray] = None
+        self._mbits_acc = 0.0       # drained into each History row
+        # monotonic run total — unlike the per-row accumulator this never
+        # loses the bits served after the last server update
+        self.total_upstream_mbits = 0.0
+        self._crash_alive: Optional[np.ndarray] = None
+        self._transient_alive: Optional[np.ndarray] = None
+
+    @property
+    def strategy(self):
+        return self.backend.strategy
+
+    def emit(self, rec: Dict[str, Any]) -> None:
+        self.history.append(rec)
+        for cb in self.callbacks:
+            cb(self, rec)
+
+    def run(self, n_updates: Optional[int] = None,
+            until_s: Optional[float] = None,
+            start_round: int = 0) -> History:
+        """Run until ``n_updates`` server updates (default ``cfg.n_rounds``)
+        or simulated time ``until_s``, whichever first. ``start_round``
+        resumes the sync policy with the same replay fast-forward as
+        ``RoundLoop.run``."""
+        n = n_updates if n_updates is not None else self.cfg.n_rounds
+        self.policy.bind(self)
+        self.policy.run(n, until_s, start_round)
+        return self.history
+
+    # --- continuous transport services (used by the async policies) ------
+
+    def setup_transport(self) -> None:
+        pon = self.pon_cfg
+        self.topology = Topology.uniform(pon.n_onus, pon.clients_per_onu,
+                                         pon.n_wavelengths, pon.slice_mbps,
+                                         pon.onu_link_mbps)
+        self._pon = UpstreamSim(self.topology, make_dba(pon.dba),
+                                on_done=self._job_done)
+        self._traffic = BackgroundTraffic(pon.background_load,
+                                          pon.bg_burst_mbits)
+        self._train_s = train_times(np.asarray(self.backend.sample_counts))
+
+    def _resched_pon(self) -> None:
+        """Keep one clock event pinned at the PON sim's next event time."""
+        if self._pon_ev is not None:
+            self._pon_ev.cancel()
+            self._pon_ev = None
+        t = self._pon.next_event_s()
+        if t is not None:
+            self._pon_ev = self.clock.schedule(t, self._pump_pon)
+
+    def _pump_pon(self) -> None:
+        self._pon_ev = None
+        self._pon.advance_to(self.clock.now)   # fires _job_done callbacks
+        self._resched_pon()
+
+    def _submit(self, job: UpstreamJob, updates=None, on_arrival=None) -> None:
+        if updates is not None:
+            self._payload[job.seq] = (updates, on_arrival)
+        self._pon.submit(job)
+        self._resched_pon()
+
+    def _job_done(self, job: UpstreamJob) -> None:
+        entry = self._payload.pop(job.seq, None)
+        if entry is None:
+            return                  # background burst: contention only
+        updates, on_arrival = entry
+        self._mbits_acc += job.size_mbits
+        self.total_upstream_mbits += job.size_mbits
+        for up in updates:
+            up.t_arrival = job.done_s
+            on_arrival(up)
+
+    def step_window(self, w: int) -> None:
+        """Window-cadence bookkeeping: failure-model step + the next chunk
+        of background bursts offered to the shared upstream."""
+        if self.failures is not None:
+            self._crash_alive, self._transient_alive = \
+                self.failures.step_components(w, self.cfg.fl.n_clients)
+        if self._traffic.load > 0.0:
+            t0 = self.clock.now
+            chunk = dataclasses.replace(self._traffic, start_s=t0)
+            for j in chunk.jobs(self.rng, self.topology, t0 + self.window_s):
+                j.seq = next(self._jobseq)
+                self._submit(j)
+
+    def crashed(self, client: int) -> bool:
+        return self._crash_alive is not None and not self._crash_alive[client]
+
+    def transient(self, client: int) -> bool:
+        return (self._transient_alive is not None
+                and not self._transient_alive[client])
+
+    def select_idle(self, n_wanted: int, busy=()) -> np.ndarray:
+        """Selection draw over the idle population (+ overselect backups)."""
+        pool = np.arange(self.cfg.fl.n_clients)
+        if busy:
+            pool = np.setdiff1d(pool, np.fromiter(busy, dtype=np.int64))
+        n = min(len(pool), int(round(n_wanted * (1.0 + self.cfg.overselect))))
+        if n == 0:
+            return np.empty(0, np.int64)
+        return self.rng.choice(pool, size=n, replace=False)
+
+    def dispatch(self, client: int, on_arrival) -> ClientUpdate:
+        """Send the current model to ``client``: eager local training (the
+        math is clock-free), then downlink + train + wireless delay before
+        the update reaches the PON edge and transport owns it."""
+        delta, weight = self.backend.client_update(client, self.rng)
+        up = ClientUpdate(client=int(client), delta=delta, weight=weight,
+                          version=self.server_version,
+                          t_dispatch=self.clock.now)
+        dt = (self.pon_cfg.downlink_s + float(self._train_s[client])
+              + self.rng.uniform(WIRELESS_S_MIN, WIRELESS_S_MAX))
+        self.clock.after(dt, self._at_edge, up, on_arrival)
+        return up
+
+    def _at_edge(self, up: ClientUpdate, on_arrival) -> None:
+        up.t_edge = self.clock.now
+        pon = self.pon_cfg
+        onu = int(self.backend.onu_ids[up.client])
+        if self.strategy.transport == "classical":
+            job = UpstreamJob(seq=next(self._jobseq), onu=onu,
+                              size_mbits=pon.model_mbits,
+                              ready_s=self.clock.now, kind="fl",
+                              client=up.client)
+            self._submit(job, [up], on_arrival)
+        else:
+            # SFL: the ONU gathers arrivals for onu_gather_s, then sends
+            # ONE θ carrying them all — the paper's constant-bandwidth
+            # property, asynchronously
+            slot = self._gather.get(onu)
+            if slot is None:
+                self._gather[onu] = ([up], on_arrival)
+                self.clock.after(self.cfg.onu_gather_s, self._close_gather,
+                                 onu)
+            else:
+                slot[0].append(up)
+
+    def _close_gather(self, onu: int) -> None:
+        ups, on_arrival = self._gather.pop(onu)
+        pon = self.pon_cfg
+        job = UpstreamJob(seq=next(self._jobseq), onu=onu,
+                          size_mbits=pon.model_mbits,
+                          ready_s=self.clock.now + pon.onu_agg_s,
+                          kind="theta")
+        self._submit(job, ups, on_arrival)
+
+    def take_upstream_mbits(self) -> float:
+        v, self._mbits_acc = self._mbits_acc, 0.0
+        return v
+
+    def apply(self, rnd_label, updates: List[ClientUpdate],
+              extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Staleness-discount, aggregate, server-update; emit a History row."""
+        stale = np.array([self.server_version - u.version for u in updates],
+                         np.float32)
+        base = np.array([u.weight for u in updates], np.float32)
+        w = staleness_weights(base, stale, self.cfg.staleness_exponent)
+        metrics = self.backend.apply_updates(
+            self.server_version, [u.client for u in updates],
+            [u.delta for u in updates], w)
+        if updates:
+            self.server_version += 1
+        rec = {"round": rnd_label, "t_s": self.clock.now,
+               "policy": self.policy.name, "version": self.server_version,
+               "involved": float(len(updates)),
+               "upstream_mbits": self.take_upstream_mbits(),
+               "staleness_mean": float(stale.mean()) if len(stale) else 0.0,
+               "staleness_max": float(stale.max()) if len(stale) else 0.0}
+        rec.update(metrics)
+        rec.update(extra or {})
+        self.emit(rec)
+        return rec

@@ -1,0 +1,330 @@
+"""repro.runtime: SimClock, incremental PON sim, Orchestrator policies —
+plus the RoundLoop resume-determinism and failure-ordering bugfix pins."""
+import math
+
+import numpy as np
+import pytest
+
+from repro import fl, runtime
+from repro.core.fedavg import FLConfig, onu_of_client
+from repro.pon import PonConfig
+from repro.pon.dba import make_dba
+from repro.pon.events import UpstreamJob, UpstreamSim, simulate_upstream
+from repro.pon.topology import Topology
+from repro.runtime.clock import SimClock
+from repro.runtime.failures import FailureModel
+from repro.runtime.policies import staleness_weights
+
+
+# ---------------------------------------------------------------- SimClock
+
+def test_clock_fires_in_time_then_fifo_order():
+    clock = SimClock()
+    seen = []
+    clock.schedule(2.0, seen.append, "b")
+    clock.schedule(1.0, seen.append, "a")
+    clock.schedule(2.0, seen.append, "c")   # same time: schedule order wins
+    clock.run_until(1.5)
+    assert seen == ["a"] and clock.now == 1.5
+    clock.run_until(5.0)
+    assert seen == ["a", "b", "c"] and clock.now == 5.0
+
+
+def test_clock_cancel_and_past_clamp():
+    clock = SimClock()
+    seen = []
+    ev = clock.schedule(1.0, seen.append, "dropped")
+    ev.cancel()
+    clock.run_until(2.0)
+    assert seen == [] and clock.empty()
+    # scheduling in the past clamps to now (zero-delay follow-up)
+    clock.schedule(0.5, seen.append, "late")
+    assert clock.peek() == 2.0
+    clock.run_until(2.0)
+    assert seen == ["late"]
+
+
+# ------------------------------------------------- incremental UpstreamSim
+
+def _rand_jobs(rng, n, n_onus):
+    return [UpstreamJob(seq=i, onu=int(rng.integers(0, n_onus)),
+                        size_mbits=float(rng.uniform(5, 200)),
+                        ready_s=float(rng.uniform(0, 30)), kind="fl")
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("dba", ["fifo", "tdma", "ipact", "fl_priority"])
+@pytest.mark.parametrize("n_w", [1, 3])
+def test_incremental_submission_matches_batch(dba, n_w):
+    """Submitting each job just before its ready time (the runtime's usage)
+    yields float-for-float the batch schedule, for every DBA policy."""
+    rng = np.random.default_rng(5)
+    topo = Topology.uniform(6, 4, n_w)
+    batch = _rand_jobs(rng, 40, topo.n_onus)
+    inc = [UpstreamJob(**{f: getattr(j, f) for f in
+                          ("seq", "onu", "size_mbits", "ready_s", "kind")})
+           for j in batch]
+    simulate_upstream(batch, topo, make_dba(dba))
+
+    sim = UpstreamSim(topo, make_dba(dba))
+    for j in sorted(inc, key=lambda j: j.ready_s):
+        sim.advance_to(j.ready_s * 0.999)    # strictly before ready
+        sim.submit(j)
+    sim.drain()
+    by_seq = {j.seq: j for j in inc}
+    for b in batch:
+        i = by_seq[b.seq]
+        assert (b.start_s, b.done_s, b.wavelength) == \
+               (i.start_s, i.done_s, i.wavelength), (dba, n_w, b.seq)
+
+
+def test_upstream_sim_on_done_fires_in_completion_order():
+    topo = Topology.uniform(3, 1, 1)
+    done = []
+    sim = UpstreamSim(topo, make_dba("fifo"), on_done=done.append)
+    for i in range(3):
+        sim.submit(UpstreamJob(seq=i, onu=i, size_mbits=100.0,
+                               ready_s=float(i)))
+    sim.drain()
+    assert [j.seq for j in done] == [0, 1, 2]
+    assert all(math.isfinite(j.done_s) for j in done)
+
+
+# ------------------------------------------------- shared test scaffolding
+
+def _transport_exp(n_selected=10, **exp_kw):
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=n_selected,
+                   pon=pon)
+    exp = fl.ExperimentConfig(fl=flc, **exp_kw)
+    counts = np.random.default_rng(0).integers(
+        50, 400, flc.n_clients).astype(np.float32)
+    onu = onu_of_client(flc)
+
+    def mk_backend(mode="sfl"):
+        return fl.TransportBackend(fl.make_strategy(mode), counts, onu)
+
+    return exp, mk_backend
+
+
+def _strip(rec):
+    """Drop the runtime-only keys the Orchestrator adds to sync rows."""
+    return {k: v for k, v in rec.items()
+            if k not in ("t_s", "policy", "version")}
+
+
+# -------------------------------------- satellite: RoundLoop run semantics
+
+def test_run_n_rounds_is_a_count_not_an_end_index():
+    exp, mk = _transport_exp()
+    hist = fl.RoundLoop(exp, mk()).run(3, start_round=2)
+    assert [r["round"] for r in hist] == [2, 3, 4]
+
+
+def test_resume_matches_uninterrupted_bit_for_bit_transport():
+    """10 straight rounds == 5 + fresh-loop resume + 5, including with
+    overselect and an active failure model (its state must replay too)."""
+    exp, mk = _transport_exp(overselect=0.3, p_crash=0.1, p_transient=0.2)
+    straight = fl.RoundLoop(exp, mk()).run(10)
+    first = fl.RoundLoop(exp, mk())
+    first.run(5)
+    resumed = fl.RoundLoop(exp, mk()).run(5, start_round=5)
+    assert first.history.records + resumed.records == straight.records
+
+
+def test_resume_matches_uninterrupted_learning_backend(tmp_path):
+    """The satellite's exact scenario: run 10 rounds straight vs
+    5 + checkpoint + restore + 5 on the learning backend — identical
+    History (requires the backend minibatch-draw replay hook)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.checkpoint import (latest_step, restore_checkpoint,
+                                  save_checkpoint)
+    from repro.data import femnist
+    from repro.models import femnist_cnn
+
+    cfg = configs.get("femnist_cnn").reduced()
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=8, local_steps=3,
+                   pon=pon)
+    clients, eval_set = femnist.generate(
+        femnist.FemnistConfig(n_clients=flc.n_clients, seed=11))
+    eval_batch = jax.tree.map(jnp.asarray, eval_set)
+    counts = femnist.sample_counts(clients)
+
+    def mk_backend():
+        params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(0))
+        return fl.ClientStackedBackend(flc, fl.make_strategy("sfl"), params,
+                                       clients, eval_batch,
+                                       femnist_cnn.loss_fn,
+                                       sample_counts=counts)
+
+    exp = fl.ExperimentConfig(fl=flc, n_rounds=10)
+    straight = fl.RoundLoop(exp, mk_backend()).run(10)
+
+    b = mk_backend()
+    first = fl.RoundLoop(exp, b)
+    first.run(5)
+    save_checkpoint(str(tmp_path), 5, b.params)
+
+    b2 = mk_backend()
+    step = latest_step(str(tmp_path))
+    b2.params, _, _ = restore_checkpoint(str(tmp_path), step, b2.params)
+    resumed = fl.RoundLoop(exp, b2).run(10 - step, start_round=step)
+    assert first.history.records + resumed.records == straight.records
+
+
+# ------------------------------------- satellite: crash-before-transport
+
+def test_crashed_clients_bill_zero_upstream_and_get_no_grant():
+    """With everyone crashed, no FL job is ever submitted to the DBA —
+    zero upstream Mbits, zero wavelength grants, zero involvement."""
+    exp, mk = _transport_exp(p_crash=1.0, n_rounds=3)
+    for mode in ("classical", "sfl"):
+        loop = fl.RoundLoop(exp, mk(mode))
+        sel, mask, rt = fl.loop._transport_stage(
+            exp, loop.backend, loop.failures, loop.rng, 0)
+        assert rt["upstream_mbits"] == 0.0, mode
+        assert rt["n_fl_jobs"] == 0 and rt["n_fl_grants"] == 0, mode
+        assert mask.sum() == 0.0, mode
+
+
+def test_partial_crash_excluded_from_transport_classical():
+    """Crashed clients are dropped BEFORE the DBA: upstream bills exactly
+    the live clients and the job count matches, while transient failures
+    stay billed (transport-side) but masked out of aggregation."""
+    exp, mk = _transport_exp(p_crash=0.5, n_rounds=1, failure_seed=42)
+    loop = fl.RoundLoop(exp, mk("classical"))
+    # replay the failure draw to know who crashed this round
+    oracle = FailureModel(p_crash=0.5, p_transient=0.0, seed=42)
+    crash_alive, _ = oracle.step_components(0, exp.fl.n_clients)
+    rec = loop.run_round(0)
+    sel_rng = np.random.default_rng(exp.seed)
+    from repro.core import selection
+    sel = selection.select_clients(sel_rng, exp.fl.n_clients,
+                                   exp.fl.n_selected, exp.overselect)
+    n_live = int(crash_alive[sel].sum())
+    model_mbits = exp.fl.pon_config().model_mbits
+    assert rec["upstream_mbits"] == pytest.approx(n_live * model_mbits)
+    assert rec["involved"] <= n_live
+
+
+def test_transient_failures_still_billed_upstream():
+    exp, mk = _transport_exp(p_transient=1.0, n_rounds=2)
+    hist = fl.RoundLoop(exp, mk("classical")).run(2)
+    assert all(r["involved"] == 0.0 for r in hist)
+    # the clients transmitted — the bits crossed the PON
+    assert all(r["upstream_mbits"] > 0.0 for r in hist)
+
+
+def test_crashed_client_cannot_delay_its_onus_theta():
+    """SFL: a crashed client is removed before the ONU cutoff heuristic,
+    so its ONU's θ forms from the remaining in-time clients only."""
+    exp, mk = _transport_exp(n_selected=20, p_crash=0.6, n_rounds=4)
+    hist = fl.RoundLoop(exp, mk("sfl")).run(4)
+    model_mbits = exp.fl.pon_config().model_mbits
+    for r in hist:
+        # upstream is only ever θs from ONUs with live in-time clients
+        n_thetas = r["upstream_mbits"] / model_mbits
+        assert n_thetas == pytest.approx(round(n_thetas))
+        assert n_thetas <= exp.fl.n_onus
+
+
+# ---------------------------------------------- Orchestrator: sync policy
+
+def test_sync_policy_reproduces_roundloop_bit_for_bit():
+    """The acceptance pin: Orchestrator(policy=sync) == RoundLoop, exactly,
+    including overselect + failures, with simulated time attached."""
+    exp, mk = _transport_exp(overselect=0.4, p_crash=0.1, p_transient=0.1,
+                             n_rounds=8)
+    want = fl.RoundLoop(exp, mk()).run(8)
+    got = runtime.Orchestrator(exp, mk(), policy="sync").run(8)
+    assert [_strip(r) for r in got] == want.records
+    deadline = exp.fl.pon_config().sync_threshold_s
+    assert got.column("t_s") == [(i + 1) * deadline for i in range(8)]
+
+
+def test_sync_policy_resume_matches_roundloop():
+    exp, mk = _transport_exp(n_rounds=6)
+    want = fl.RoundLoop(exp, mk()).run(6)
+    got = runtime.Orchestrator(exp, mk(), policy="sync").run(
+        3, start_round=3)
+    assert [_strip(r) for r in got] == want.records[3:]
+
+
+def test_sync_policy_respects_sim_budget():
+    exp, mk = _transport_exp(n_rounds=10)
+    got = runtime.Orchestrator(exp, mk(), policy="sync").run(
+        10, until_s=70.0)   # 25 s windows → only 2 complete rounds fit
+    assert len(got) == 2
+
+
+# ----------------------------------------- Orchestrator: async policies
+
+def test_semi_sync_carries_stragglers_with_staleness():
+    exp, mk = _transport_exp(n_rounds=6, policy="semi_sync")
+    hist = runtime.Orchestrator(exp, mk()).run(6)
+    assert len(hist) == 6
+    assert [r["round"] for r in hist] == list(range(6))
+    # stragglers arrive in later windows: some update must be stale
+    assert any(r["staleness_max"] >= 1.0 for r in hist)
+    # simulated time advances one deadline window per row
+    assert hist.column("t_s") == [(i + 1) * 25.0 for i in range(6)]
+
+
+def test_fedbuff_applies_every_k_arrivals():
+    exp, mk = _transport_exp(policy="fedbuff", buffer_k=3, concurrency=6)
+    orch = runtime.Orchestrator(exp, mk())
+    hist = orch.run(5, until_s=300.0)
+    assert len(hist) == 5
+    assert all(r["involved"] == 3.0 for r in hist)
+    t = hist.column("t_s")
+    assert all(a < b for a, b in zip(t, t[1:]))    # updates as events
+    assert any(r["staleness_mean"] > 0.0 for r in hist)
+    # the run total also counts bits served after the last server update
+    assert orch.total_upstream_mbits >= sum(hist.column("upstream_mbits"))
+    assert orch.total_upstream_mbits > 0.0
+
+
+def test_fedbuff_crashed_clients_never_dispatch():
+    exp, mk = _transport_exp(policy="fedbuff", buffer_k=2, concurrency=4,
+                             p_crash=1.0)
+    hist = runtime.Orchestrator(exp, mk()).run(5, until_s=200.0)
+    assert len(hist) == 0      # nobody alive to dispatch — and no hang
+    # no budget either: the idle-tick guard must terminate the run
+    # instead of spinning through empty failure-model windows
+    hist = runtime.Orchestrator(exp, mk()).run(5)
+    assert len(hist) == 0
+
+
+def test_async_policy_rejects_sync_only_backend():
+    exp, mk = _transport_exp(policy="fedbuff")
+
+    class SyncOnly:
+        strategy = fl.make_strategy("sfl")
+        sample_counts = np.ones(20, np.float32)
+        onu_ids = np.zeros(20, np.int64)
+
+        def run_round(self, *a):
+            return {}
+
+    with pytest.raises(TypeError, match="client_update"):
+        runtime.Orchestrator(exp, SyncOnly())
+
+
+def test_policy_registry_aliases():
+    assert runtime.canonical_policy("async") == "fedbuff"
+    assert runtime.canonical_policy("semi-sync") == "semi_sync"
+    with pytest.raises(KeyError):
+        runtime.canonical_policy("nope")
+
+
+def test_staleness_weights_discount():
+    w = staleness_weights(np.array([100.0, 100.0]), np.array([0.0, 3.0]),
+                          alpha=0.5)
+    assert w[0] == pytest.approx(100.0)
+    assert w[1] == pytest.approx(100.0 / 2.0)      # (1+3)^-0.5
+    flat = staleness_weights(np.array([100.0]), np.array([7.0]), alpha=0.0)
+    assert flat[0] == pytest.approx(100.0)         # α=0 disables the discount
