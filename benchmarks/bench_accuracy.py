@@ -39,9 +39,11 @@ def run(n_rounds: int = 30, n_selected: int = 128, full: bool = False,
     {mode: {"accs": [...], "involved": [...]}}."""
     cfg = configs.get("femnist_cnn") if full else configs.get("femnist_cnn").reduced()
     # FLConfig owns the FL topology — adopt the one requested via pon so
-    # --onus/--clients-per-onu on the CLIs are honored, not overridden
+    # --onus/--clients-per-onu/--n-pons on the CLIs are honored, not
+    # overridden
     topo = {} if pon is None else {"n_onus": pon.n_onus,
-                                   "clients_per_onu": pon.clients_per_onu}
+                                   "clients_per_onu": pon.clients_per_onu,
+                                   "n_pons": pon.n_pons}
     flc = FLConfig(n_selected=n_selected, local_steps=8, local_lr=0.06,
                    pon=pon, **topo)
     data_cfg = femnist.FemnistConfig(n_clients=flc.n_clients, seed=seed + 7)

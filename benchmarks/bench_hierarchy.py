@@ -1,0 +1,223 @@
+"""Multi-PON hierarchy sweep: per-segment upstream + time-to-accuracy vs
+``n_pons`` × {hier_sfl, sfl, classical} (DESIGN.md §12).
+
+The scaling claim being measured: as the forest grows (population =
+``n_pons`` × per-PON clients, per-PON selection held constant), k-step
+``hier_sfl`` keeps EVERY segment's Mbits/round flat —
+
+  * ``pon_mbits_max``   — the busiest PON tree (ONU→OLT), ≤ n_onus models
+  * ``metro_mbits_max`` — the busiest OLT→metro uplink, 1 Φ
+  * ``trunk_mbits``     — metro→server, 1 Ψ
+
+— while ``classical`` grows everywhere the traffic concentrates (the
+trunk carries every client's model) and flat ``sfl`` holds the PON
+segment but leaks at the trunk (every θ crosses it: n_pons × n_onus
+models). Time-to-accuracy over the same forests shows the learning side:
+more PONs = more involved clients per round at the same per-segment cost.
+
+CPU-only, seconds at the defaults:
+    PYTHONPATH=src python -m benchmarks.bench_hierarchy --json hier.json
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Sequence
+
+import numpy as np
+
+from repro import fl
+from repro.core.fedavg import FLConfig, onu_of_client
+from repro.pon import MODEL_UPDATE_MBITS, PonConfig, expected_segment_mbits
+
+MODES: Sequence[str] = ("classical", "sfl", "hier_sfl")
+N_PONS: Sequence[int] = (1, 2, 4, 8)
+
+
+def _mk(mode: str, n_pons: int):
+    return fl.make_strategy(mode,
+                            **fl.filter_strategy_kwargs(
+                                mode, {"n_pons": n_pons}))
+
+
+def _segment_row(rt, mode: str, model_mbits: float) -> dict:
+    """Per-segment Mbits for one round record; the flat path (n_pons == 1)
+    has no metro keys, so fill them from the closed-form budget."""
+    if "trunk_mbits" in rt:
+        return {k: rt[k] for k in ("pon_mbits_max", "metro_mbits",
+                                   "metro_mbits_max", "trunk_mbits")}
+    n_jobs = int(round(rt["upstream_mbits"] / model_mbits))
+    canon = "hier" if fl.canonical_name(mode) == "hier_sfl" else \
+        fl.canonical_name(mode)
+    canon = "sfl" if canon == "sfl_two_step" else canon
+    exp = expected_segment_mbits(canon, model_mbits,
+                                 n_selected=n_jobs, n_active_onus=n_jobs,
+                                 n_active_pons=1 if n_jobs else 0)
+    return {"pon_mbits_max": rt["upstream_mbits"],
+            "metro_mbits": exp["metro"], "metro_mbits_max": exp["metro"],
+            "trunk_mbits": exp["trunk"]}
+
+
+def run_transport(rounds: int = 6, seed: int = 0, per_pon_selected: int = 16,
+                  n_onus: int = 8, clients_per_onu: int = 10,
+                  pons_list: Sequence[int] = N_PONS,
+                  modes: Sequence[str] = MODES):
+    """Transport-only sweep (paired draws across modes, like bench_dba)."""
+    rows = []
+    for n_pons in pons_list:
+        pon = PonConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
+                        n_pons=n_pons)
+        flc = FLConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
+                       n_pons=n_pons, n_selected=per_pon_selected * n_pons,
+                       pon=pon)
+        counts = np.random.default_rng(seed).integers(
+            50, 400, flc.n_clients).astype(np.float32)
+        onu = onu_of_client(flc)
+        for mode in modes:
+            backend = fl.TransportBackend(_mk(mode, n_pons), counts, onu)
+            acc = {"involved": [], "pon_mbits_max": [], "metro_mbits": [],
+                   "metro_mbits_max": [], "trunk_mbits": [], "pon_total": []}
+            for r in range(rounds):
+                # per-round seeds keep draws PAIRED across modes
+                exp = fl.ExperimentConfig(
+                    fl=flc, strategy=fl.canonical_name(mode),
+                    strategy_kwargs=tuple(sorted(fl.filter_strategy_kwargs(
+                        mode, {"n_pons": n_pons}).items())),
+                    n_rounds=1, seed=seed + 1000 * r)
+                sel, mask, rt = fl.loop._transport_stage(
+                    exp, backend, None, np.random.default_rng(exp.seed), 0)
+                seg = _segment_row(rt, mode, pon.model_mbits)
+                acc["involved"].append(float(mask.sum()))
+                acc["pon_total"].append(float(rt["upstream_mbits"]))
+                for k, v in seg.items():
+                    acc[k].append(float(v))
+            rows.append({
+                "n_pons": n_pons, "mode": fl.canonical_name(mode),
+                "n_selected": flc.n_selected, "n_clients": flc.n_clients,
+                "involved_mean": float(np.mean(acc["involved"])),
+                "pon_mbits": float(np.mean(acc["pon_total"])),
+                "pon_mbits_max": float(np.mean(acc["pon_mbits_max"])),
+                "metro_mbits": float(np.mean(acc["metro_mbits"])),
+                "metro_mbits_max": float(np.mean(acc["metro_mbits_max"])),
+                "trunk_mbits": float(np.mean(acc["trunk_mbits"])),
+            })
+    return rows
+
+
+def run_tta(rounds: int = 6, seed: int = 0, target_acc: float = 0.10,
+            per_pon_selected: int = 4, n_onus: int = 2,
+            clients_per_onu: int = 4, pons_list: Sequence[int] = (1, 2, 4),
+            modes: Sequence[str] = MODES):
+    """Learning sweep: sync rounds on the reduced CNN per (n_pons, mode);
+    time-to-accuracy in simulated seconds (rounds × the PON deadline)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.data import femnist
+    from repro.models import femnist_cnn
+
+    cfg = configs.get("femnist_cnn").reduced()
+    rows = []
+    for n_pons in pons_list:
+        pon = PonConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
+                        n_pons=n_pons)
+        flc = FLConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
+                       n_pons=n_pons, n_selected=per_pon_selected * n_pons,
+                       local_steps=8, local_lr=0.06, pon=pon)
+        clients, eval_set = femnist.generate(
+            femnist.FemnistConfig(n_clients=flc.n_clients, seed=seed + 7))
+        eval_batch = jax.tree.map(jnp.asarray, eval_set)
+        counts = femnist.sample_counts(clients)
+        for mode in modes:
+            params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(seed))
+            backend = fl.ClientStackedBackend(
+                flc, _mk(mode, n_pons), params, clients, eval_batch,
+                femnist_cnn.loss_fn, sample_counts=counts)
+            exp = fl.ExperimentConfig(
+                fl=flc, strategy=fl.canonical_name(mode),
+                strategy_kwargs=tuple(sorted(fl.filter_strategy_kwargs(
+                    mode, {"n_pons": n_pons}).items())),
+                n_rounds=rounds, seed=seed)
+            hist = fl.RoundLoop(exp, backend).run()
+            deadline = flc.pon_config().sync_threshold_s
+            accs = [r.get("acc", 0.0) for r in hist]
+            hit = next((i for i, a in enumerate(accs) if a >= target_acc),
+                       None)
+            rows.append({
+                "n_pons": n_pons, "mode": fl.canonical_name(mode),
+                "t_to_target_s": ((hit + 1) * deadline if hit is not None
+                                  else float("nan")),
+                "target_acc": target_acc,
+                "final_acc": float(accs[-1]) if accs else 0.0,
+                "involved_mean": float(np.mean(hist.column("involved", 0.0))),
+            })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="transport rounds per cell")
+    ap.add_argument("--tta-rounds", type=int, default=0,
+                    help="learning rounds per time-to-accuracy cell "
+                         "(0: transport sweep only)")
+    ap.add_argument("--target-acc", type=float, default=0.10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--per-pon-selected", type=int, default=16)
+    ap.add_argument("--onus", type=int, default=8)
+    ap.add_argument("--clients-per-onu", type=int, default=10)
+    ap.add_argument("--pons", type=int, nargs="+", default=list(N_PONS))
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write rows as {'hierarchy': [...]} JSON")
+    args = ap.parse_args(argv)
+
+    rows = run_transport(rounds=args.rounds, seed=args.seed,
+                         per_pon_selected=args.per_pon_selected,
+                         n_onus=args.onus,
+                         clients_per_onu=args.clients_per_onu,
+                         pons_list=tuple(args.pons))
+    print(f"bench_hierarchy (per-PON N={args.per_pon_selected}, "
+          f"{args.onus} ONUs × {args.clients_per_onu} clients per PON, "
+          f"{args.rounds} rounds)")
+    print("n_pons,mode,n_selected,involved_mean,pon_mbits,pon_mbits_max,"
+          "metro_mbits_max,trunk_mbits")
+    for r in rows:
+        print(f"{r['n_pons']},{r['mode']},{r['n_selected']},"
+              f"{r['involved_mean']:.1f},{r['pon_mbits']:.0f},"
+              f"{r['pon_mbits_max']:.0f},{r['metro_mbits_max']:.0f},"
+              f"{r['trunk_mbits']:.0f}")
+
+    # the headline, in one line: per-segment flat for hier, trunk growth
+    # for the baselines
+    def _seg(mode, n_pons, key):
+        return [r[key] for r in rows
+                if r["mode"] == mode and r["n_pons"] == n_pons][0]
+    lo, hi = min(args.pons), max(args.pons)
+    print(f"# per-segment flatness {lo}→{hi} PONs "
+          f"(pon_max | trunk, Mbits/round): "
+          f"hier_sfl {_seg('hier_sfl', lo, 'pon_mbits_max'):.0f}→"
+          f"{_seg('hier_sfl', hi, 'pon_mbits_max'):.0f} | "
+          f"{_seg('hier_sfl', lo, 'trunk_mbits'):.0f}→"
+          f"{_seg('hier_sfl', hi, 'trunk_mbits'):.0f}   "
+          f"classical trunk {_seg('classical', lo, 'trunk_mbits'):.0f}→"
+          f"{_seg('classical', hi, 'trunk_mbits'):.0f} (grows)")
+
+    if args.tta_rounds > 0:
+        tta = run_tta(rounds=args.tta_rounds, seed=args.seed,
+                      target_acc=args.target_acc)
+        print("n_pons,mode,t_to_target_s,final_acc,involved_mean")
+        for r in tta:
+            print(f"{r['n_pons']},{r['mode']},{r['t_to_target_s']:.0f},"
+                  f"{r['final_acc']:.3f},{r['involved_mean']:.1f}")
+        rows = rows + [dict(r, kind="tta") for r in tta]
+
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"hierarchy": rows}, f, indent=2, default=float)
+        print(f"[json] wrote {len(rows)} rows to {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -57,8 +57,8 @@ def run(rounds: int = 6, sim_s: float = None, target_acc: float = 0.10,
     if pon is None:
         pon = PonConfig()
     flc = FLConfig(n_onus=pon.n_onus, clients_per_onu=pon.clients_per_onu,
-                   n_selected=n_selected, local_steps=8, local_lr=0.06,
-                   pon=pon)
+                   n_pons=pon.n_pons, n_selected=n_selected, local_steps=8,
+                   local_lr=0.06, pon=pon)
     window = window_s if window_s is not None else pon.sync_threshold_s
     budget_s = sim_s if sim_s is not None else rounds * window
     budget_s = max(window, (budget_s // window) * window)

@@ -6,6 +6,8 @@
   involved  — Fig. 2b (involved clients under the 25 s deadline)
   accuracy  — Fig. 2c (FedAvg accuracy, any registered repro.fl strategy)
   dba       — DBA policy × wavelengths × background-load sweep (beyond-paper)
+  hierarchy — multi-PON forest: per-segment Mbits vs n_pons ×
+              {hier_sfl, sfl, classical} (beyond-paper, DESIGN.md §12)
   time_to_accuracy — simulated-seconds-to-target, sync vs semi_sync vs
               fedbuff through the repro.runtime Orchestrator (beyond-paper)
   kernels   — ONU-AF / quantize micro-bench
@@ -26,8 +28,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="upstream|involved|accuracy|dba|time_to_accuracy|"
-                         "kernels|report")
+                    help="upstream|involved|accuracy|dba|hierarchy|"
+                         "time_to_accuracy|kernels|report")
     ap.add_argument("--full", action="store_true",
                     help="accuracy bench with the full LEAF CNN (slow)")
     ap.add_argument("--rounds", type=int, default=None,
@@ -36,15 +38,17 @@ def main() -> None:
                     help="write per-bench rows as JSON")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_dba, bench_involved,
-                            bench_kernels, bench_time_to_accuracy,
-                            bench_upstream, report)
+    from benchmarks import (bench_accuracy, bench_dba, bench_hierarchy,
+                            bench_involved, bench_kernels,
+                            bench_time_to_accuracy, bench_upstream, report)
 
     acc_argv = []
     tta_argv = []
+    hier_argv = []
     if args.rounds is not None:
         acc_argv += ["--rounds", str(args.rounds)]
         tta_argv += ["--rounds", str(args.rounds)]
+        hier_argv += ["--rounds", str(args.rounds)]
     if args.full:
         acc_argv += ["--full"]
 
@@ -52,6 +56,7 @@ def main() -> None:
         "upstream": lambda: bench_upstream.main([]),
         "involved": lambda: bench_involved.main([]),
         "dba": lambda: bench_dba.main([]),
+        "hierarchy": lambda: bench_hierarchy.main(hier_argv),
         "kernels": bench_kernels.main,
         "accuracy": lambda: bench_accuracy.main(acc_argv),
         "time_to_accuracy": lambda: bench_time_to_accuracy.main(tta_argv),

@@ -28,8 +28,9 @@ from repro.pon import PonConfig, round_times
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
-    n_onus: int = 16
+    n_onus: int = 16                # ONUs per PON tree
     clients_per_onu: int = 20
+    n_pons: int = 1                 # PON trees (multi-PON hierarchy, §12)
     n_selected: int = 48            # N in the paper (48 / 128 in Fig. 2)
     local_steps: int = 5            # H: minibatch SGD steps per round
     local_batch: int = 10           # LEAF defaults
@@ -47,25 +48,33 @@ class FLConfig:
 
     @property
     def n_clients(self) -> int:
-        return self.n_onus * self.clients_per_onu
+        """Total population across the PON forest."""
+        return self.n_pons * self.n_onus * self.clients_per_onu
+
+    @property
+    def total_onus(self) -> int:
+        """ONUs across all PON trees — the segment count for aggregation."""
+        return self.n_pons * self.n_onus
 
     def pon_config(self) -> PonConfig:
         """The PON transport config for this run.
 
         Transport knobs (dba, wavelengths, traffic, rates) come from
-        ``self.pon``; topology (n_onus, clients_per_onu) and the deadline
-        always come from this FLConfig, so the client→ONU map handed to
-        the simulator can never disagree with the simulated tree.
+        ``self.pon``; topology (n_pons, n_onus, clients_per_onu) and the
+        deadline always come from this FLConfig, so the client→ONU map
+        handed to the simulator can never disagree with the simulated tree.
         """
         base = self.pon if self.pon is not None else PonConfig()
         return dataclasses.replace(base,
                                    n_onus=self.n_onus,
                                    clients_per_onu=self.clients_per_onu,
+                                   n_pons=self.n_pons,
                                    sync_threshold_s=self.sync_threshold_s)
 
 
 def onu_of_client(fl: FLConfig) -> np.ndarray:
-    """Static topology: client c hangs off ONU c // clients_per_onu."""
+    """Static topology: client c hangs off GLOBAL ONU c // clients_per_onu
+    (PON-major numbering — ids run across the whole forest)."""
     return np.arange(fl.n_clients) // fl.clients_per_onu
 
 

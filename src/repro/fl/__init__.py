@@ -18,6 +18,7 @@ from repro.fl.strategy import (
     Classical,
     FedProx,
     FedOpt,
+    HierSfl,
     register_strategy,
     make_strategy,
     canonical_name,
@@ -39,7 +40,7 @@ from repro.fl.backends import (
 )
 
 __all__ = [
-    "Strategy", "SflTwoStep", "Classical", "FedProx", "FedOpt",
+    "Strategy", "SflTwoStep", "Classical", "FedProx", "FedOpt", "HierSfl",
     "register_strategy", "make_strategy", "canonical_name", "strategy_names",
     "ExperimentConfig", "add_experiment_cli_args", "comparison_modes",
     "experiment_config_from_args", "filter_strategy_kwargs",

@@ -89,7 +89,7 @@ class ClientStackedBackend:
         → uplink stats + eval cadence (any change here changes the sync
         run_round and the async apply_updates together)."""
         agg, stats = self.strategy.aggregate(stacked, weights, mask, onu_ids,
-                                             self.fl.n_onus)
+                                             self.fl.total_onus)
         self.params, self.server_state = self.strategy.server_update(
             self.params, agg, self.server_state)
         out = {"uplink_models": float(stats["uplink_models"])}

@@ -91,10 +91,14 @@ def add_experiment_cli_args(ap, strategy_default: str = "sfl_two_step") -> None:
                    help="per-round client crash probability (FailureModel)")
     g.add_argument("--p-transient", type=float, default=0.0,
                    help="per-round transient-failure probability (FailureModel)")
-    g.add_argument("--fedprox-mu", type=float, default=0.01,
-                   help="fedprox proximal coefficient mu")
-    g.add_argument("--server-opt", default="adamw",
-                   help="fedopt server optimizer: adamw|yogi|sgd|sgdm")
+    g.add_argument("--fedprox-mu", type=float, default=None,
+                   help="fedprox proximal coefficient mu (default: the "
+                        "strategy's own; >0 on hier_sfl turns the proximal "
+                        "term on)")
+    g.add_argument("--server-opt", default=None,
+                   help="fedopt server optimizer: adamw|yogi|sgd|sgdm "
+                        "(default: the strategy's own; set on hier_sfl to "
+                        "turn the adaptive server step on)")
     g.add_argument("--server-lr", type=float, default=None,
                    help="fedopt server learning rate (default: strategy's)")
     r = ap.add_argument_group("event-driven runtime (repro.runtime)")
@@ -119,7 +123,8 @@ def strategy_kwargs_from_args(args) -> dict:
     :func:`filter_strategy_kwargs` before instantiating a strategy; this is
     the ONE place a new strategy's CLI knob gets added."""
     return {"mu": args.fedprox_mu, "server_opt": args.server_opt,
-            "server_lr": args.server_lr}
+            "server_lr": args.server_lr,
+            "n_pons": getattr(args, "n_pons", 1)}
 
 
 def comparison_modes(strategy: str) -> list:
@@ -140,13 +145,18 @@ def filter_strategy_kwargs(name: str, kwargs) -> dict:
     name = canonical_name(name)
     kwargs = dict(kwargs or {})
     out = {}
-    if name == "fedprox" and "mu" in kwargs:
+    if name == "fedprox" and kwargs.get("mu") is not None:
         out["mu"] = kwargs["mu"]
-    if name == "fedopt":
+    if name in ("fedopt", "hier_sfl"):
         if kwargs.get("server_opt") is not None:
             out["server_opt"] = kwargs["server_opt"]
         if kwargs.get("server_lr") is not None:
             out["server_lr"] = kwargs["server_lr"]
+    if name == "hier_sfl":
+        if kwargs.get("n_pons") is not None:
+            out["n_pons"] = kwargs["n_pons"]
+        if kwargs.get("mu") is not None:
+            out["mu"] = kwargs["mu"]
     return out
 
 
@@ -158,7 +168,7 @@ def experiment_config_from_args(args, **overrides) -> ExperimentConfig:
     """
     pon = pon_config_from_args(args)
     fl = FLConfig(n_onus=pon.n_onus, clients_per_onu=pon.clients_per_onu,
-                  pon=pon)
+                  n_pons=pon.n_pons, pon=pon)
     name = canonical_name(args.strategy)
     skw = filter_strategy_kwargs(name, strategy_kwargs_from_args(args))
     return ExperimentConfig(

@@ -119,6 +119,11 @@ def sync_round(cfg: ExperimentConfig, backend, failures,
     rec = {"round": rnd, "n_selected": len(sel),
            "involved": float(mask.sum()),
            "upstream_mbits": float(rt["upstream_mbits"])}
+    # per-segment accounting from the hierarchical transport (DESIGN.md §12)
+    for key in ("pon_mbits_max", "metro_mbits", "metro_mbits_max",
+                "trunk_mbits", "n_pons"):
+        if key in rt:
+            rec[key] = float(rt[key])
     rec.update(metrics)
     return rec
 

@@ -23,6 +23,9 @@ Shipped strategies (see the registry):
   * ``fedopt``       — server-side AdamW/Yogi (Reddi et al. 2021) treating
     the aggregated delta as a pseudo-gradient, replacing the fixed
     ``server_lr=1.0`` apply.
+  * ``hier_sfl`` (alias ``hier``) — k-step hierarchical aggregation over a
+    multi-PON forest (ONU → OLT → metro → server, DESIGN.md §12); composes
+    the fedprox local term (``mu``) and fedopt server step (``server_opt``).
 
 Adding a strategy is ~20 LoC: subclass, override a hook, register:
 
@@ -35,6 +38,7 @@ Adding a strategy is ~20 LoC: subclass, override a hook, register:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, ClassVar, Dict, Optional, Tuple
 
 import jax
@@ -148,6 +152,97 @@ class FedOpt(SflTwoStep):
             params, pseudo_grad, state, self.server_lr)
 
 
+@dataclasses.dataclass(frozen=True)
+class HierSfl(SflTwoStep):
+    """k-step hierarchical aggregation over a forest of PONs (DESIGN.md §12).
+
+    Three aggregation tiers instead of the paper's two:
+
+        ONU partial-agg (θ_o = Σ_{j∈o} k·Δ)  →  OLT agg (Φ_p = Σ_{o∈p} θ_o)
+        →  metro agg (Ψ = Σ_p Φ_p)           →  server:  w += Ψ / K
+
+    The weighted sum is associative, so the k-step result is the same
+    weighted mean — what changes is the *transport* (``transport='hier'``):
+    one Φ per PON crosses the metro segment and one Ψ crosses the trunk,
+    keeping every segment's upstream constant in both client and PON count.
+
+    With ``n_pons=1`` the hierarchy is degenerate (the OLT is the server
+    edge) and both the aggregate and the transport are bit-for-bit
+    ``sfl_two_step`` — pinned in tests/test_hier.py.
+
+    Composes with the other strategy axes by DELEGATING to them instead
+    of multiplying the registry (or copying their bodies): ``mu > 0``
+    routes local_update through :class:`FedProx`, ``server_opt`` routes
+    the server step through :class:`FedOpt` — so a fix to either lands
+    here for free. Both default off → plain FedAvg math, exactly
+    SflTwoStep's. ``server_lr=None`` means "the composed strategy's own
+    default": 1.0 for the plain apply, FedOpt's 0.03 when ``server_opt``
+    is set (inheriting the plain 1.0 into AdamW would be a 33x footgun).
+    """
+
+    name: ClassVar[str] = "hier_sfl"
+    transport: ClassVar[str] = "hier"
+
+    server_lr: Optional[float] = None    # None → composed default
+    n_pons: int = 1
+    mu: float = 0.0                      # > 0: FedProx proximal local term
+    server_opt: Optional[str] = None     # e.g. "adamw"/"yogi": FedOpt server
+
+    def _fedopt(self) -> "FedOpt":
+        kw = {} if self.server_lr is None else {"server_lr": self.server_lr}
+        return FedOpt(server_opt=self.server_opt, **kw)
+
+    def local_update(self, global_params, batches, loss_fn: Callable, fl):
+        if self.mu <= 0.0:
+            return super().local_update(global_params, batches, loss_fn, fl)
+        return FedProx(mu=self.mu).local_update(global_params, batches,
+                                                loss_fn, fl)
+
+    def init_state(self, params):
+        if self.server_opt is None:
+            return None
+        return self._fedopt().init_state(params)
+
+    def server_update(self, params, agg, state):
+        if self.server_opt is not None:
+            return self._fedopt().server_update(params, agg, state)
+        lr = 1.0 if self.server_lr is None else self.server_lr
+        new_params = jax.tree.map(
+            lambda w, d: (w.astype(jnp.float32) + lr * d).astype(w.dtype),
+            params, agg)
+        return new_params, state
+
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int):
+        if self.n_pons <= 1:
+            # degenerate forest: EXACTLY the two-step float schedule
+            return super().aggregate(deltas, weights, mask, onu_ids, n_onus)
+        if n_onus % self.n_pons:
+            raise ValueError(
+                f"hier_sfl: total ONU count {n_onus} is not divisible by "
+                f"n_pons={self.n_pons} — pass the forest's total_onus")
+        per_pon = n_onus // self.n_pons
+        w = (weights * mask).astype(jnp.float32)
+        K = jnp.sum(w)
+        pon_of_onu = jnp.arange(n_onus) // per_pon
+
+        def per_leaf(x):
+            xf = x.astype(jnp.float32)
+            wx = xf * w.reshape((-1,) + (1,) * (xf.ndim - 1))
+            theta = jax.ops.segment_sum(wx, onu_ids, num_segments=n_onus)
+            phi = jax.ops.segment_sum(theta, pon_of_onu,
+                                      num_segments=self.n_pons)
+            return jnp.sum(phi, axis=0) / jnp.maximum(K, 1e-9)
+
+        agg = jax.tree.map(per_leaf, deltas)
+        onu_active = jnp.zeros((n_onus,), jnp.float32).at[onu_ids].add(mask)
+        pon_active = jax.ops.segment_sum(onu_active, pon_of_onu,
+                                         num_segments=self.n_pons)
+        stats = {"K": K, "uplink_models": jnp.sum(onu_active > 0),
+                 "metro_models": jnp.sum(pon_active > 0),
+                 "involved": jnp.sum(mask)}
+        return agg, stats
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -180,11 +275,25 @@ def strategy_names():
     return sorted(_REGISTRY)
 
 
+_WARNED_DROPPED: set = set()
+
+
 def make_strategy(name: str, **kwargs) -> Strategy:
     """Instantiate a registered strategy; unknown kwargs are dropped so one
-    shared CLI can pass its full knob set to any strategy."""
-    cls = _REGISTRY[canonical_name(name)]
+    shared CLI can pass its full knob set to any strategy — but never
+    silently: the first drop per strategy name warns, listing the keys
+    (a typo'd knob otherwise just vanishes; pinned in tests/test_fl.py).
+    """
+    name = canonical_name(name)
+    cls = _REGISTRY[name]
     fields = {f.name for f in dataclasses.fields(cls)}
+    dropped = sorted(k for k in kwargs if k not in fields)
+    if dropped and name not in _WARNED_DROPPED:
+        _WARNED_DROPPED.add(name)
+        warnings.warn(
+            f"make_strategy({name!r}) dropped unknown kwargs {dropped} "
+            f"(accepted: {sorted(fields)}); this warning fires once per "
+            "strategy name", stacklevel=2)
     return cls(**{k: v for k, v in kwargs.items() if k in fields})
 
 
@@ -192,3 +301,4 @@ register_strategy("sfl_two_step", "sfl")(SflTwoStep)
 register_strategy("classical")(Classical)
 register_strategy("fedprox")(FedProx)
 register_strategy("fedopt")(FedOpt)
+register_strategy("hier_sfl", "hier")(HierSfl)

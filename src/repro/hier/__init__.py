@@ -1,0 +1,49 @@
+"""repro.hier — multi-PON hierarchical aggregation (k-step SFL).
+
+The public face of the hierarchy subsystem (DESIGN.md §12). The paper's
+two-step aggregation keeps ONE PON's upstream constant in client count;
+stacking the step — many PONs per metro node, many metro nodes per core —
+keeps *every* segment's upstream constant, which is the scaling path to
+populations of 10^5+ clients:
+
+    from repro import fl, hier
+
+    # an 8-PON forest, 16 ONUs × 20 clients each = 2560 clients
+    exp = fl.ExperimentConfig(strategy="hier_sfl",
+                              strategy_kwargs=(("n_pons", 8),),
+                              ).with_fl(n_pons=8, n_selected=256)
+    metro = hier.MetroTopology.uniform(n_pons=8)
+
+Pieces (each lives with its own layer; this module is the map):
+
+  * :class:`~repro.pon.metro.MetroTopology` — the forest: N per-PON trees
+    plus the OLT→metro segment (itself a ``Topology`` — the tiers recurse).
+  * :func:`~repro.pon.metro.simulate_hier_round` — the k-step transport:
+    one ``UpstreamSim`` per PON plus a metro-segment sim; reached
+    automatically through ``round_times`` whenever ``PonConfig.n_pons > 1``.
+  * :class:`~repro.fl.strategy.HierSfl` — the registered ``hier_sfl``
+    strategy (ONU θ → OLT Φ → metro Ψ → server), composing the fedprox
+    local term and fedopt server step.
+  * :func:`~repro.pon.metro.expected_segment_mbits` — the closed-form
+    per-segment budget (tests' and benchmarks' oracle).
+
+CLI: every shared entry point grew ``--n-pons`` / ``--metro-rate-mbps`` /
+``--metro-latency-ms``; try
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --steps 20 --strategy hier_sfl --n-pons 8
+    PYTHONPATH=src python -m benchmarks.bench_hierarchy --json hier.json
+"""
+from repro.fl.strategy import HierSfl
+from repro.pon.metro import (
+    MetroTopology,
+    expected_segment_mbits,
+    simulate_hier_round,
+)
+
+__all__ = [
+    "HierSfl",
+    "MetroTopology",
+    "expected_segment_mbits",
+    "simulate_hier_round",
+]

@@ -31,6 +31,11 @@ from repro.launch.mesh import make_test_mesh
 
 
 def build_rules(mesh, transport: str) -> ShardingRules:
+    """Sharding rules induced by the strategy's transport: ``classical``
+    replicates params (flat all-reduce benchmark); ``sfl`` and ``hier``
+    both take the FSDP schedule — the in-network aggregation tiers map to
+    the reduce-scatter/all-reduce stages of the same collective (the metro
+    tier adds segments on the wire, not stages in the schedule)."""
     axes = tuple(mesh.axis_names)
     batch = tuple(a for a in ("pod", "data") if a in axes) or None
     rules = ShardingRules(batch=batch, fsdp="data" if "data" in axes else None,

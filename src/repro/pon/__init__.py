@@ -21,6 +21,11 @@ from repro.pon.dba import (
 )
 from repro.pon.traffic import BackgroundTraffic
 from repro.pon.events import UpstreamJob, simulate_round, simulate_upstream
+from repro.pon.metro import (
+    MetroTopology,
+    expected_segment_mbits,
+    simulate_hier_round,
+)
 
 __all__ = [
     "PonConfig", "add_pon_cli_args", "pon_config_from_args",
@@ -31,4 +36,5 @@ __all__ = [
     "TdmaDba", "make_dba",
     "BackgroundTraffic",
     "UpstreamJob", "simulate_round", "simulate_upstream",
+    "MetroTopology", "expected_segment_mbits", "simulate_hier_round",
 ]

@@ -214,7 +214,26 @@ def simulate_round(cfg: PonConfig, rng: np.random.Generator,
     trees, custom policies, or hand-built traffic. RNG consumption matches
     the closed form (one wireless draw per selected client) when
     background load is zero, so seeded runs stay reproducible.
+
+    Multi-PON forests (``cfg.n_pons > 1``) route to the hierarchical
+    simulator (``repro.pon.metro``): one ``UpstreamSim`` per PON plus a
+    metro-segment sim, with ``mode='hier'`` adding OLT/metro aggregation
+    tiers. With one PON the OLT *is* the server edge — there is no metro
+    segment — so ``mode='hier'`` degenerates exactly to the flat ``sfl``
+    path (the bit-for-bit pin in tests/test_hier.py).
     """
+    if cfg.n_pons > 1:
+        if topology is not None or dba is not None or traffic is not None:
+            raise ValueError(
+                "multi-PON rounds (cfg.n_pons > 1) build per-tree "
+                "topology/DBA/traffic from cfg — explicit overrides would "
+                "be silently wrong here; pass a MetroTopology to "
+                "pon.metro.simulate_hier_round instead")
+        from repro.pon import metro
+        return metro.simulate_hier_round(cfg, rng, selected, onu_ids,
+                                         sample_counts, mode)
+    if mode == "hier":
+        mode = "sfl"
     if topology is None:
         topology = Topology.uniform(cfg.n_onus, cfg.clients_per_onu,
                                     cfg.n_wavelengths, cfg.slice_mbps,

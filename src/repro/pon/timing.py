@@ -45,7 +45,7 @@ ONU_AGG_S = 0.05                    # θ weighted-add at the ONU (layer-2 op)
 
 @dataclasses.dataclass(frozen=True)
 class PonConfig:
-    n_onus: int = 16
+    n_onus: int = 16                # ONUs per PON tree
     clients_per_onu: int = 20
     slice_mbps: float = SLICE_MBPS
     model_mbits: float = MODEL_UPDATE_MBITS
@@ -60,14 +60,35 @@ class PonConfig:
     background_load: float = 0.0    # offered bg load ÷ total capacity
     bg_burst_mbits: float = 5.0     # mean background burst size
     onu_link_mbps: Optional[float] = None   # per-ONU drop-link cap
+    # --- multi-PON hierarchy (pon/metro.py; DESIGN.md §12). n_pons == 1 is
+    # the degenerate single-OLT paper setting — the metro tier only exists
+    # for n_pons >= 2, so every existing configuration is untouched ---
+    n_pons: int = 1                 # PON trees feeding the metro node
+    metro_rate_mbps: float = 1000.0  # OLT→metro shared-segment channel rate
+    metro_latency_ms: float = 0.5   # per-hop metro propagation latency
+    metro_wavelengths: int = 1      # channels on the OLT→metro segment
 
     @property
     def n_clients(self) -> int:
-        return self.n_onus * self.clients_per_onu
+        """Total client population (across all PON trees)."""
+        return self.n_pons * self.n_onus * self.clients_per_onu
+
+    @property
+    def total_onus(self) -> int:
+        return self.n_pons * self.n_onus
 
     @property
     def upload_s(self) -> float:
         return self.model_mbits / self.slice_mbps
+
+    @property
+    def metro_upload_s(self) -> float:
+        """One model crossing an OLT→metro channel."""
+        return self.model_mbits / self.metro_rate_mbps
+
+    @property
+    def metro_latency_s(self) -> float:
+        return self.metro_latency_ms / 1e3
 
 
 def add_pon_cli_args(ap) -> None:
@@ -88,6 +109,14 @@ def add_pon_cli_args(ap) -> None:
     ap.add_argument("--clients-per-onu", type=int, default=d.clients_per_onu)
     ap.add_argument("--sfl-queueing", action="store_true",
                     help="θ uploads queue through the DBA (strict)")
+    ap.add_argument("--n-pons", type=int, default=d.n_pons,
+                    help="PON trees feeding the metro node (1: single-OLT "
+                         "paper setting, no metro tier)")
+    ap.add_argument("--metro-rate-mbps", type=float, default=d.metro_rate_mbps,
+                    help="OLT→metro shared-segment channel rate")
+    ap.add_argument("--metro-latency-ms", type=float,
+                    default=d.metro_latency_ms,
+                    help="per-hop metro propagation latency")
 
 
 def pon_config_from_args(args) -> PonConfig:
@@ -95,7 +124,10 @@ def pon_config_from_args(args) -> PonConfig:
     return PonConfig(n_onus=args.onus, clients_per_onu=args.clients_per_onu,
                      dba=args.dba, n_wavelengths=args.wavelengths,
                      background_load=args.bg_load,
-                     sfl_queueing=args.sfl_queueing)
+                     sfl_queueing=args.sfl_queueing,
+                     n_pons=args.n_pons,
+                     metro_rate_mbps=args.metro_rate_mbps,
+                     metro_latency_ms=args.metro_latency_ms)
 
 
 def train_times(sample_counts: np.ndarray) -> np.ndarray:

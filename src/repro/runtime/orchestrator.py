@@ -20,6 +20,16 @@ internal events are bridged onto the same clock, so one heap orders
 everything and "simulated seconds" becomes the measurement axis
 (``benchmarks/bench_time_to_accuracy.py``).
 
+Multi-PON forests (``n_pons > 1``, DESIGN.md §12) run one bridged
+``UpstreamSim`` per PON tree plus one for the OLT→metro segment, all on
+the same clock. The hierarchical transport stacks the gather window: each
+ONU gathers arrivals for ``onu_gather_s`` and emits one θ onto its PON;
+each OLT gathers its θ arrivals for another ``onu_gather_s`` and emits one
+Φ onto the metro segment — so per-segment upstream stays constant in both
+client and PON count, asynchronously. The flat transports generalize too:
+``classical``/``sfl`` jobs that cross a PON are relayed over the metro
+segment individually (which is exactly why they don't scale).
+
 The ``sync`` policy bypasses the continuous machinery and calls the exact
 ``repro.fl.loop.sync_round`` pipeline per deadline window — that is the
 degenerate configuration pinned bit-for-bit against RoundLoop.
@@ -36,12 +46,45 @@ from repro.fl.config import ExperimentConfig
 from repro.fl.loop import Callback, History
 from repro.pon.dba import make_dba
 from repro.pon.events import UpstreamJob, UpstreamSim
+from repro.pon.metro import MetroTopology
 from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, train_times
 from repro.pon.topology import Topology
 from repro.pon.traffic import BackgroundTraffic
 from repro.runtime.clock import SimClock
 from repro.runtime.policies import (AggregationPolicy, ClientUpdate,
                                     make_policy, staleness_weights)
+
+
+class _BridgedSim:
+    """One incremental ``UpstreamSim`` bridged onto the shared SimClock.
+
+    A single clock event is kept pinned at the sim's next internal event
+    time, so the grant machine's completions interleave deterministically
+    with dispatches, gather windows, and every other sim on the clock.
+    """
+
+    def __init__(self, clock: SimClock, topology: Topology, dba, on_done):
+        self.clock = clock
+        self.topology = topology
+        self.sim = UpstreamSim(topology, dba, on_done=on_done)
+        self._ev = None
+
+    def submit(self, job: UpstreamJob) -> None:
+        self.sim.submit(job)
+        self._resched()
+
+    def _resched(self) -> None:
+        if self._ev is not None:
+            self._ev.cancel()
+            self._ev = None
+        t = self.sim.next_event_s()
+        if t is not None:
+            self._ev = self.clock.schedule(t, self._pump)
+
+    def _pump(self) -> None:
+        self._ev = None
+        self.sim.advance_to(self.clock.now)   # fires on_done callbacks
+        self._resched()
 
 
 class Orchestrator:
@@ -79,16 +122,19 @@ class Orchestrator:
                 "sync-only — use policy='sync' or the RoundLoop driver")
         # continuous-transport state (built by setup_transport for the
         # async policies; the sync policy never touches it)
-        self._pon: Optional[UpstreamSim] = None
-        self._pon_ev = None
+        self._pons: List[_BridgedSim] = []
+        self._metro: Optional[_BridgedSim] = None
         self._payload: Dict[int, Any] = {}
-        self._gather: Dict[int, Any] = {}
+        self._gather: Dict[int, Any] = {}       # ONU θ gather (global onu id)
+        self._olt_gather: Dict[int, Any] = {}   # OLT Φ gather (pon index)
         self._jobseq = itertools.count()
         self._train_s: Optional[np.ndarray] = None
         self._mbits_acc = 0.0       # drained into each History row
-        # monotonic run total — unlike the per-row accumulator this never
-        # loses the bits served after the last server update
+        self._metro_acc = 0.0
+        # monotonic run totals — unlike the per-row accumulators these never
+        # lose the bits served after the last server update
         self.total_upstream_mbits = 0.0
+        self.total_metro_mbits = 0.0
         self._crash_alive: Optional[np.ndarray] = None
         self._transient_alive: Optional[np.ndarray] = None
 
@@ -117,58 +163,111 @@ class Orchestrator:
 
     def setup_transport(self) -> None:
         pon = self.pon_cfg
-        self.topology = Topology.uniform(pon.n_onus, pon.clients_per_onu,
-                                         pon.n_wavelengths, pon.slice_mbps,
-                                         pon.onu_link_mbps)
-        self._pon = UpstreamSim(self.topology, make_dba(pon.dba),
-                                on_done=self._job_done)
+        self.metro_topology = MetroTopology.from_config(pon)
+        self._pons = [_BridgedSim(self.clock, topo, make_dba(pon.dba),
+                                  self._pon_job_done)
+                      for topo in self.metro_topology.pons]
+        # single-PON forests have no metro tier — the OLT is the server edge
+        self._metro = (_BridgedSim(self.clock,
+                                   self.metro_topology.metro_segment(),
+                                   make_dba(pon.dba), self._metro_job_done)
+                       if pon.n_pons > 1 else None)
+        self.topology = self._pons[0].topology   # degenerate-case alias
         self._traffic = BackgroundTraffic(pon.background_load,
                                           pon.bg_burst_mbits)
         self._train_s = train_times(np.asarray(self.backend.sample_counts))
 
-    def _resched_pon(self) -> None:
-        """Keep one clock event pinned at the PON sim's next event time."""
-        if self._pon_ev is not None:
-            self._pon_ev.cancel()
-            self._pon_ev = None
-        t = self._pon.next_event_s()
-        if t is not None:
-            self._pon_ev = self.clock.schedule(t, self._pump_pon)
-
-    def _pump_pon(self) -> None:
-        self._pon_ev = None
-        self._pon.advance_to(self.clock.now)   # fires _job_done callbacks
-        self._resched_pon()
-
-    def _submit(self, job: UpstreamJob, updates=None, on_arrival=None) -> None:
+    def _submit(self, sim: _BridgedSim, job: UpstreamJob,
+                updates=None, on_arrival=None, fn=None, ctx=None) -> None:
+        """Queue ``job`` on ``sim``; at completion ``fn(job, updates,
+        on_arrival, ctx)`` runs (no payload → background burst)."""
         if updates is not None:
-            self._payload[job.seq] = (updates, on_arrival)
-        self._pon.submit(job)
-        self._resched_pon()
+            self._payload[job.seq] = (updates, on_arrival, fn, ctx)
+        sim.submit(job)
 
-    def _job_done(self, job: UpstreamJob) -> None:
+    def _pon_job_done(self, job: UpstreamJob) -> None:
         entry = self._payload.pop(job.seq, None)
         if entry is None:
             return                  # background burst: contention only
-        updates, on_arrival = entry
+        updates, on_arrival, fn, ctx = entry
         self._mbits_acc += job.size_mbits
         self.total_upstream_mbits += job.size_mbits
+        fn(job, updates, on_arrival, ctx)
+
+    def _metro_job_done(self, job: UpstreamJob) -> None:
+        entry = self._payload.pop(job.seq, None)
+        if entry is None:
+            return
+        updates, on_arrival, fn, ctx = entry
+        self._metro_acc += job.size_mbits
+        self.total_metro_mbits += job.size_mbits
+        fn(job, updates, on_arrival, ctx)
+
+    # --- per-leg completion handlers -------------------------------------
+
+    def _finish(self, job: UpstreamJob, updates, on_arrival, ctx) -> None:
+        """Arrival at the aggregation point: hand updates to the policy."""
         for up in updates:
             up.t_arrival = job.done_s
             on_arrival(up)
 
+    def _finish_after_latency(self, job, updates, on_arrival, ctx) -> None:
+        """Metro completion: the propagation leg, then delivery."""
+        lat = self.pon_cfg.metro_latency_s
+        t_arr = job.done_s + lat
+
+        def deliver():
+            for up in updates:
+                up.t_arrival = t_arr
+                on_arrival(up)
+        self.clock.after(lat, deliver)
+
+    def _relay_metro(self, job, updates, on_arrival, ctx) -> None:
+        """Flat transports over a forest: forward the served PON job across
+        the metro segment as its own job (classical models and flat-sfl θs
+        each cross individually — the non-scaling baseline)."""
+        mj = UpstreamJob(seq=next(self._jobseq), onu=int(ctx),
+                         size_mbits=self.pon_cfg.model_mbits,
+                         ready_s=self.clock.now, kind=job.kind,
+                         client=job.client)
+        self._submit(self._metro, mj, updates, on_arrival,
+                     self._finish_after_latency)
+
+    def _olt_collect(self, job, updates, on_arrival, ctx) -> None:
+        """hier: the OLT gathers θ arrivals for one more gather window,
+        then emits a single Φ onto the metro segment."""
+        p = int(ctx)
+        slot = self._olt_gather.get(p)
+        if slot is None:
+            self._olt_gather[p] = (list(updates), on_arrival)
+            self.clock.after(self.cfg.onu_gather_s, self._close_olt_gather, p)
+        else:
+            slot[0].extend(updates)
+
+    def _close_olt_gather(self, p: int) -> None:
+        ups, on_arrival = self._olt_gather.pop(p)
+        pon = self.pon_cfg
+        job = UpstreamJob(seq=next(self._jobseq), onu=p,
+                          size_mbits=pon.model_mbits,
+                          ready_s=self.clock.now + pon.onu_agg_s,
+                          kind="theta")
+        self._submit(self._metro, job, ups, on_arrival,
+                     self._finish_after_latency)
+
     def step_window(self, w: int) -> None:
         """Window-cadence bookkeeping: failure-model step + the next chunk
-        of background bursts offered to the shared upstream."""
+        of background bursts offered to every PON tree's upstream."""
         if self.failures is not None:
             self._crash_alive, self._transient_alive = \
                 self.failures.step_components(w, self.cfg.fl.n_clients)
         if self._traffic.load > 0.0:
             t0 = self.clock.now
             chunk = dataclasses.replace(self._traffic, start_s=t0)
-            for j in chunk.jobs(self.rng, self.topology, t0 + self.window_s):
-                j.seq = next(self._jobseq)
-                self._submit(j)
+            for sim in self._pons:
+                for j in chunk.jobs(self.rng, sim.topology,
+                                    t0 + self.window_s):
+                    j.seq = next(self._jobseq)
+                    self._submit(sim, j)
 
     def crashed(self, client: int) -> bool:
         return self._crash_alive is not None and not self._crash_alive[client]
@@ -203,36 +302,50 @@ class Orchestrator:
     def _at_edge(self, up: ClientUpdate, on_arrival) -> None:
         up.t_edge = self.clock.now
         pon = self.pon_cfg
-        onu = int(self.backend.onu_ids[up.client])
+        onu_g = int(self.backend.onu_ids[up.client])   # global ONU id
+        p = onu_g // pon.n_onus                        # owning PON tree
+        onu_local = onu_g % pon.n_onus
         if self.strategy.transport == "classical":
-            job = UpstreamJob(seq=next(self._jobseq), onu=onu,
+            job = UpstreamJob(seq=next(self._jobseq), onu=onu_local,
                               size_mbits=pon.model_mbits,
                               ready_s=self.clock.now, kind="fl",
                               client=up.client)
-            self._submit(job, [up], on_arrival)
+            fn = self._relay_metro if self._metro is not None else self._finish
+            self._submit(self._pons[p], job, [up], on_arrival, fn, ctx=p)
         else:
-            # SFL: the ONU gathers arrivals for onu_gather_s, then sends
-            # ONE θ carrying them all — the paper's constant-bandwidth
+            # SFL/hier: the ONU gathers arrivals for onu_gather_s, then
+            # sends ONE θ carrying them all — the paper's constant-bandwidth
             # property, asynchronously
-            slot = self._gather.get(onu)
+            slot = self._gather.get(onu_g)
             if slot is None:
-                self._gather[onu] = ([up], on_arrival)
+                self._gather[onu_g] = ([up], on_arrival)
                 self.clock.after(self.cfg.onu_gather_s, self._close_gather,
-                                 onu)
+                                 onu_g)
             else:
                 slot[0].append(up)
 
-    def _close_gather(self, onu: int) -> None:
-        ups, on_arrival = self._gather.pop(onu)
+    def _close_gather(self, onu_g: int) -> None:
+        ups, on_arrival = self._gather.pop(onu_g)
         pon = self.pon_cfg
-        job = UpstreamJob(seq=next(self._jobseq), onu=onu,
+        p = onu_g // pon.n_onus
+        job = UpstreamJob(seq=next(self._jobseq), onu=onu_g % pon.n_onus,
                           size_mbits=pon.model_mbits,
                           ready_s=self.clock.now + pon.onu_agg_s,
                           kind="theta")
-        self._submit(job, ups, on_arrival)
+        if self._metro is None:
+            fn = self._finish       # the OLT is the server edge
+        elif self.strategy.transport == "hier":
+            fn = self._olt_collect  # θ → OLT gather window → one Φ
+        else:
+            fn = self._relay_metro  # flat sfl: each θ crosses the metro
+        self._submit(self._pons[p], job, ups, on_arrival, fn, ctx=p)
 
     def take_upstream_mbits(self) -> float:
         v, self._mbits_acc = self._mbits_acc, 0.0
+        return v
+
+    def take_metro_mbits(self) -> float:
+        v, self._metro_acc = self._metro_acc, 0.0
         return v
 
     def apply(self, rnd_label, updates: List[ClientUpdate],
@@ -253,6 +366,8 @@ class Orchestrator:
                "upstream_mbits": self.take_upstream_mbits(),
                "staleness_mean": float(stale.mean()) if len(stale) else 0.0,
                "staleness_max": float(stale.max()) if len(stale) else 0.0}
+        if self._metro is not None:
+            rec["metro_mbits"] = self.take_metro_mbits()
         rec.update(metrics)
         rec.update(extra or {})
         self.emit(rec)

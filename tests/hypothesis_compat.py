@@ -1,38 +1,121 @@
-"""Optional-hypothesis shim: property tests skip cleanly when absent.
+"""Optional-hypothesis shim with a built-in random-example fallback.
 
 ``hypothesis`` is an optional dev dependency (declared in pyproject.toml).
-Test modules import ``given``/``settings``/``st`` from here instead of from
-hypothesis directly; without the package, ``@given`` replaces the test with
-a zero-argument skip stub (no fixture lookup on the strategy parameters),
-so the rest of the suite still runs.
-"""
-import pytest
+Test modules import ``given``/``settings``/``st`` from here instead of
+from hypothesis directly. With the package installed (CI), the real
+engine runs — shrinking, the example database, the works. Without it,
+``@given`` now runs a miniature property engine instead of skipping: a
+deterministically-seeded RNG draws ``max_examples`` examples from the
+declared strategies and replays the failing example's values in the
+assertion message. No shrinking, no database — but the properties are
+actually *checked* in a bare environment, which is the point of test
+hardening (a skip is a hole, not a guarantee).
 
+Fallback strategy support is the subset the suite uses: ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``lists``, ``tuples``.
+Anything else raises immediately (add it here, or accept the hypothesis
+dependency) rather than silently passing nothing.
+"""
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    import numpy as _np
+
     HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 25        # default when @settings is absent
 
-    def given(*args, **kwargs):
-        def deco(fn):
-            def _skipped():
-                pytest.skip("hypothesis not installed (optional dev dep)")
-            _skipped.__name__ = fn.__name__
-            _skipped.__doc__ = fn.__doc__
-            return _skipped
-        return deco
+    class _Strategy:
+        """One drawable strategy: wraps a ``draw(rng) -> value`` closure."""
 
-    def settings(*args, **kwargs):
-        def deco(fn):
-            return fn
-        return deco
+        def __init__(self, draw, repr_):
+            self._draw = draw
+            self._repr = repr_
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self._repr
 
     class _Strategies:
-        """Any strategy call resolves to an inert placeholder."""
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            hi = (1 << 16) if max_value is None else max_value
+            return _Strategy(lambda rng: int(rng.integers(min_value, hi + 1)),
+                             f"integers({min_value}, {hi})")
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                f"floats({min_value}, {max_value})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                             "booleans()")
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))],
+                f"sampled_from({elements!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [elements.draw(rng) for _ in range(
+                    int(rng.integers(min_size, max_size + 1)))],
+                f"lists({elements!r}, {min_size}, {max_size})")
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies),
+                f"tuples({strategies!r})")
+
         def __getattr__(self, name):
-            return lambda *a, **k: None
+            raise AttributeError(
+                f"hypothesis fallback: strategy st.{name} is not "
+                "implemented in tests/hypothesis_compat.py — add it or "
+                "install hypothesis")
 
     st = _Strategies()
+
+    def given(**strategies):
+        if not strategies:
+            raise TypeError("fallback @given needs keyword strategies")
+
+        def deco(fn):
+            def _runner():
+                import zlib
+                n = getattr(_runner, "_max_examples", _FALLBACK_EXAMPLES)
+                # deterministic per-test seed (crc32: PYTHONHASHSEED-proof)
+                seed = zlib.crc32(
+                    (fn.__module__ + "." + fn.__name__).encode())
+                rng = _np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise enriched
+                        raise AssertionError(
+                            f"property fallback: example {i + 1}/{n} "
+                            f"failed with drawn values {drawn!r}: {e}"
+                        ) from e
+            _runner.__name__ = fn.__name__
+            _runner.__doc__ = fn.__doc__
+            _runner.__module__ = fn.__module__
+            return _runner
+        return deco
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return deco
 
 __all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,97 @@
+"""CLI ↔ config round-trip pins: the shared argparse defaults must
+reproduce the default configs field-for-field, so a new knob added to one
+side cannot silently drift from the other (the bug class this catches:
+an argparse default that differs from the dataclass default would make
+`python -m ... ` runs differ from library-API runs with no flag given)."""
+import argparse
+import dataclasses
+
+import pytest
+
+from repro import fl
+from repro.core.fedavg import FLConfig
+from repro.pon import PonConfig, add_pon_cli_args, pon_config_from_args
+
+
+def _pon_args(argv=()):
+    ap = argparse.ArgumentParser()
+    add_pon_cli_args(ap)
+    return ap.parse_args(list(argv))
+
+
+def _exp_args(argv=()):
+    ap = argparse.ArgumentParser()
+    fl.add_experiment_cli_args(ap)
+    return ap.parse_args(list(argv))
+
+
+def test_pon_cli_defaults_reproduce_default_ponconfig():
+    """pon_config_from_args(defaults) == PonConfig() — dataclass equality
+    is field-for-field, so EVERY current and future PonConfig knob with a
+    CLI flag is pinned here automatically."""
+    assert pon_config_from_args(_pon_args()) == PonConfig()
+
+
+def test_experiment_cli_defaults_reproduce_default_config():
+    cfg = fl.experiment_config_from_args(_exp_args())
+    default = fl.ExperimentConfig()
+    for f in dataclasses.fields(fl.ExperimentConfig):
+        if f.name == "fl":
+            continue        # compared field-by-field below
+        assert getattr(cfg, f.name) == getattr(default, f.name), f.name
+    # the nested FLConfig: every field except the pon overlay matches the
+    # stock FLConfig, and the RESOLVED transport config is stock too
+    for f in dataclasses.fields(FLConfig):
+        if f.name == "pon":
+            continue
+        assert getattr(cfg.fl, f.name) == getattr(FLConfig(), f.name), f.name
+    assert cfg.fl.pon_config() == FLConfig().pon_config()
+
+
+def test_strategy_kwargs_defaults_are_empty_for_every_strategy():
+    """With no flags given, no strategy receives ANY CLI kwargs — the
+    dataclass defaults rule. (This is why --fedprox-mu/--server-opt
+    default to None: a concrete argparse default would silently override
+    the strategy's own, e.g. turning on hier_sfl's proximal term.)"""
+    args = _exp_args()
+    raw = fl.strategy_kwargs_from_args(args)
+    for name in fl.strategy_names():
+        skw = fl.filter_strategy_kwargs(name, raw)
+        skw.pop("n_pons", None)        # topology, not a tuning default
+        assert skw == {}, (name, skw)
+
+
+def test_explicit_flags_roundtrip_into_configs():
+    args = _exp_args(["--dba", "tdma", "--wavelengths", "2",
+                      "--bg-load", "0.5", "--onus", "8",
+                      "--clients-per-onu", "10", "--sfl-queueing",
+                      "--n-pons", "4", "--metro-rate-mbps", "500",
+                      "--metro-latency-ms", "2.0",
+                      "--strategy", "hier_sfl", "--overselect", "0.25",
+                      "--p-crash", "0.1"])
+    cfg = fl.experiment_config_from_args(args)
+    pcfg = cfg.fl.pon_config()
+    assert pcfg == PonConfig(n_onus=8, clients_per_onu=10, dba="tdma",
+                             n_wavelengths=2, background_load=0.5,
+                             sfl_queueing=True, n_pons=4,
+                             metro_rate_mbps=500.0, metro_latency_ms=2.0)
+    assert cfg.strategy == "hier_sfl"
+    assert dict(cfg.strategy_kwargs) == {"n_pons": 4}
+    assert cfg.overselect == 0.25 and cfg.p_crash == pytest.approx(0.1)
+    assert cfg.fl.n_clients == 4 * 8 * 10
+
+
+def test_every_pon_cli_flag_reaches_pon_config_from_args():
+    """Guard against a flag added to add_pon_cli_args but forgotten in
+    pon_config_from_args: flip every non-default-able flag and require
+    the built config to differ from stock."""
+    flips = {
+        "--dba": "ipact", "--wavelengths": "3", "--bg-load": "0.7",
+        "--onus": "5", "--clients-per-onu": "7", "--n-pons": "2",
+        "--metro-rate-mbps": "123", "--metro-latency-ms": "9",
+    }
+    for flag, value in flips.items():
+        cfg = pon_config_from_args(_pon_args([flag, value]))
+        assert cfg != PonConfig(), f"{flag} silently ignored"
+    assert pon_config_from_args(
+        _pon_args(["--sfl-queueing"])).sfl_queueing is True

@@ -202,6 +202,30 @@ def test_history_callback_sink():
 
 # ---------------------------------------------------------------- satellites
 
+def test_make_strategy_warns_once_per_name_on_dropped_kwargs():
+    """Unknown kwargs are still dropped (one shared CLI feeds every
+    strategy) but never silently: the first drop per strategy name warns
+    with the dropped keys, later drops stay quiet."""
+    import warnings
+
+    from repro.fl import strategy as strategy_mod
+
+    strategy_mod._WARNED_DROPPED.discard("fedprox")
+    with pytest.warns(UserWarning, match=r"fedprox.*bogus_knob"):
+        strat = fl.make_strategy("fedprox", bogus_knob=1, mu=0.5)
+    assert strat.mu == 0.5                      # known kwargs still apply
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # a second warn would raise
+        fl.make_strategy("fedprox", bogus_knob=2)
+    # aliases share the canonical name's once-latch
+    strategy_mod._WARNED_DROPPED.discard("sfl_two_step")
+    with pytest.warns(UserWarning, match=r"sfl_two_step"):
+        fl.make_strategy("sfl_two_step", bogus_knob=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        fl.make_strategy("sfl", bogus_knob=2)   # same latch → silent
+
+
 def test_int8_allreduce_requires_key():
     with pytest.raises(ValueError, match="PRNG key"):
         aggregation.two_step_allreduce({"g": jnp.ones(8)}, compress="int8",

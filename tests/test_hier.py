@@ -1,0 +1,400 @@
+"""Multi-PON hierarchical aggregation (repro.hier / DESIGN.md §12):
+degenerate-case bit-for-bit pins, per-segment bandwidth accounting, the
+k-step aggregate oracle, and the multi-PON Orchestrator transport."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fl, hier, runtime
+from repro.core import aggregation
+from repro.core.fedavg import FLConfig, onu_of_client
+from repro.pon import (MetroTopology, PonConfig, expected_segment_mbits,
+                       round_times)
+
+
+def _setup(n_pons, n_onus=4, clients_per_onu=5, seed=1):
+    cfg = PonConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
+                    n_pons=n_pons)
+    onu = np.arange(cfg.n_clients) // cfg.clients_per_onu
+    k = np.random.default_rng(seed).integers(50, 400, cfg.n_clients)
+    return cfg, onu, k
+
+
+# ------------------------------------------------- the degenerate-case pin
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_hier_with_one_pon_matches_sfl_bit_for_bit_transport(seed):
+    """ACCEPTANCE: hier transport over a single PON == the flat sfl path,
+    exactly — with one PON the OLT is the server edge, no metro tier."""
+    cfg, onu, k = _setup(n_pons=1, n_onus=16, clients_per_onu=20)
+    sel = np.random.default_rng(seed + 9).choice(cfg.n_clients, 64,
+                                                 replace=False)
+    a = round_times(cfg, np.random.default_rng(seed), sel, onu, k, "sfl")
+    b = round_times(cfg, np.random.default_rng(seed), sel, onu, k, "hier")
+    for key in ("ready", "t_done", "involved"):
+        assert np.array_equal(a[key], b[key]), key
+    assert a["upstream_mbits"] == b["upstream_mbits"]
+
+
+def test_hier_strategy_one_pon_matches_sfl_aggregate_bit_for_bit():
+    rng = np.random.default_rng(3)
+    C, n_onus = 14, 4
+    tree = {"w": jnp.asarray(rng.normal(size=(C, 5, 2)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(C, 3)).astype(np.float32))}
+    weights = jnp.asarray(rng.uniform(1, 80, C).astype(np.float32))
+    mask = jnp.asarray((rng.random(C) > 0.4).astype(np.float32))
+    onu = jnp.asarray(rng.integers(0, n_onus, C))
+    a, _ = fl.make_strategy("hier_sfl", n_pons=1).aggregate(
+        tree, weights, mask, onu, n_onus)
+    b, _ = fl.make_strategy("sfl").aggregate(tree, weights, mask, onu, n_onus)
+    for key in tree:
+        assert np.array_equal(np.asarray(a[key]), np.asarray(b[key])), key
+
+
+def test_hier_one_pon_roundloop_trajectory_matches_sfl():
+    """The full driver pin: hier_sfl and sfl_two_step RoundLoop histories
+    are identical records at n_pons=1 (transport-only, many rounds)."""
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=10, pon=pon)
+    counts = np.random.default_rng(0).integers(
+        50, 400, flc.n_clients).astype(np.float32)
+    onu = onu_of_client(flc)
+
+    def run(strategy):
+        exp = fl.ExperimentConfig(fl=flc, strategy=strategy, n_rounds=6)
+        backend = fl.TransportBackend(fl.make_strategy(strategy), counts, onu)
+        return fl.RoundLoop(exp, backend).run().records
+
+    assert run("hier_sfl") == run("sfl_two_step")
+
+
+# ------------------------------------------------- per-segment accounting
+
+def _selected(cfg, per_pon, seed=2):
+    n_sel = per_pon * cfg.n_pons
+    return np.random.default_rng(seed).choice(cfg.n_clients, n_sel,
+                                              replace=False)
+
+
+def test_per_segment_mbits_flat_for_hier_growing_for_classical():
+    """ACCEPTANCE: per-PON upstream and metro-trunk Mbits/round stay flat
+    in n_pons for hier_sfl; the classical trunk grows linearly."""
+    seg = {}
+    for n_pons in (2, 4, 8):
+        cfg, onu, k = _setup(n_pons)
+        sel = _selected(cfg, per_pon=8)
+        for mode in ("classical", "hier"):
+            rt = round_times(cfg, np.random.default_rng(0), sel, onu, k, mode)
+            seg[(mode, n_pons)] = rt
+    model = PonConfig().model_mbits
+    # hier: busiest PON tree bounded by its ONU count; trunk is ONE model
+    for n_pons in (2, 4, 8):
+        rt = seg[("hier", n_pons)]
+        assert rt["pon_mbits_max"] <= 4 * model
+        assert rt["metro_mbits_max"] == model       # one Φ per OLT uplink
+        assert rt["trunk_mbits"] == model           # one Ψ to the server
+    # classical: the trunk carries every client's model — linear growth
+    assert seg[("classical", 8)]["trunk_mbits"] == \
+        pytest.approx(2 * seg[("classical", 4)]["trunk_mbits"])
+    assert seg[("classical", 4)]["trunk_mbits"] == \
+        pytest.approx(2 * seg[("classical", 2)]["trunk_mbits"])
+    assert seg[("hier", 8)]["trunk_mbits"] == seg[("hier", 2)]["trunk_mbits"]
+
+
+def test_simulated_segments_match_closed_form_budget():
+    """The simulator's per-segment counts equal the closed-form oracle
+    (expected_segment_mbits) given the realized active sets."""
+    cfg, onu, k = _setup(n_pons=3)
+    sel = _selected(cfg, per_pon=6)
+    model = cfg.model_mbits
+    for mode in ("classical", "sfl", "hier"):
+        rt = round_times(cfg, np.random.default_rng(1), sel, onu, k, mode)
+        n_jobs = rt["n_fl_jobs"]
+        n_active_pons = int(round(rt["metro_mbits"] / model)) \
+            if mode == "hier" else 3
+        want = expected_segment_mbits(
+            mode, model, n_selected=len(sel), n_active_onus=n_jobs,
+            n_active_pons=n_active_pons)
+        assert rt["upstream_mbits"] == pytest.approx(want["pon"]), mode
+        if mode == "hier":
+            assert rt["trunk_mbits"] == pytest.approx(want["trunk"])
+        else:
+            assert rt["trunk_mbits"] == pytest.approx(
+                rt["n_metro_jobs"] * model), mode
+
+
+def test_expected_segment_mbits_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown transport mode"):
+        expected_segment_mbits("nope", 1.0, 1, 1, 1)
+
+
+def test_hier_involvement_beats_classical_at_scale():
+    """The learning-side payoff: at 8 busy PONs the classical trunk
+    serializes everyone's model and involvement collapses, while the
+    aggregate transports stay near-full — hier at a fraction of flat
+    sfl's per-segment bandwidth (the preceding test)."""
+    cfg, onu, k = _setup(n_pons=8, n_onus=8, clients_per_onu=10)
+    inv = {m: 0.0 for m in ("classical", "sfl", "hier")}
+    n_sel = 0
+    for r in range(3):                          # paired draws per round
+        sel = _selected(cfg, per_pon=16, seed=2 + r)   # N = 128 of 640
+        n_sel += len(sel)
+        for mode in inv:
+            rt = round_times(cfg, np.random.default_rng(5 + r), sel, onu, k,
+                             mode)
+            inv[mode] += rt["involved"].sum()
+    assert inv["hier"] > inv["classical"]
+    assert inv["hier"] >= 0.95 * inv["sfl"]     # within noise of flat sfl
+    assert inv["hier"] >= 0.8 * n_sel
+    assert inv["classical"] <= 0.5 * n_sel
+
+
+def test_hier_thetas_win_trunk_contention_when_queued():
+    """sfl_queueing=True: aggregates queue through the metro DBA. Flat
+    sfl's n_pons·n_onus θs contend on the trunk and lose involvement;
+    hier's n_pons Φs barely queue — hierarchical aggregation is what keeps
+    the shared metro segment uncongested."""
+    cfg, onu, k = _setup(n_pons=8, n_onus=8, clients_per_onu=10)
+    cfg = dataclasses.replace(cfg, sfl_queueing=True)
+    tot = {m: 0.0 for m in ("sfl", "hier")}
+    for r in range(3):
+        sel = _selected(cfg, per_pon=16, seed=2 + r)
+        for mode in tot:
+            rt = round_times(cfg, np.random.default_rng(5 + r), sel, onu, k,
+                             mode)
+            tot[mode] += rt["involved"].sum()
+    assert tot["hier"] >= tot["sfl"]
+
+
+# ---------------------------------------------------------- MetroTopology
+
+def test_metro_topology_client_and_onu_maps():
+    mt = MetroTopology.uniform(n_pons=3, n_onus=2, clients_per_onu=2)
+    assert (mt.n_pons, mt.n_clients, mt.total_onus) == (3, 12, 6)
+    assert mt.onu_of_client().tolist() == [0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5]
+    assert mt.pon_of_onu(np.array([0, 1, 2, 3, 4, 5])).tolist() == \
+        [0, 0, 1, 1, 2, 2]
+    seg = mt.metro_segment()
+    assert seg.n_onus == 3 and seg.n_wavelengths == 1
+    assert seg.wavelengths[0].rate_mbps == 1000.0
+
+
+def test_flconfig_hier_plumbing():
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_pons=3)
+    assert flc.n_clients == 60 and flc.total_onus == 12
+    pcfg = flc.pon_config()
+    assert pcfg.n_pons == 3 and pcfg.n_clients == 60
+    # global ONU ids span the whole forest
+    assert onu_of_client(flc).max() == 11
+
+
+# --------------------------------------------------- k-step aggregate math
+
+def test_hier_aggregate_matches_numpy_oracle_multi_pon():
+    rng = np.random.default_rng(7)
+    C, n_pons, per_pon = 21, 3, 4
+    n_onus = n_pons * per_pon
+    tree = {"w": jnp.asarray(rng.normal(size=(C, 6)).astype(np.float32))}
+    weights = jnp.asarray(rng.uniform(1, 80, C).astype(np.float32))
+    mask = jnp.asarray((rng.random(C) > 0.3).astype(np.float32))
+    onu = jnp.asarray(rng.integers(0, n_onus, C))
+    strat = fl.make_strategy("hier_sfl", n_pons=n_pons)
+    agg, stats = strat.aggregate(tree, weights, mask, onu, n_onus)
+    want, K = aggregation.numpy_weighted_mean(
+        np.asarray(tree["w"]), np.asarray(weights), np.asarray(mask))
+    np.testing.assert_allclose(np.asarray(agg["w"]), want, rtol=1e-4,
+                               atol=1e-4)
+    assert np.isclose(float(stats["K"]), K)
+    assert 0 < int(stats["metro_models"]) <= n_pons
+    assert int(stats["uplink_models"]) >= int(stats["metro_models"])
+
+
+def test_hier_aggregate_rejects_indivisible_forest():
+    strat = fl.make_strategy("hier_sfl", n_pons=3)
+    tree = {"w": jnp.ones((4, 2))}
+    with pytest.raises(ValueError, match="not divisible"):
+        strat.aggregate(tree, jnp.ones(4), jnp.ones(4),
+                        jnp.zeros(4, jnp.int32), 4)
+
+
+def test_hier_composes_fedprox_and_fedopt():
+    """mu > 0 flips the local objective to the proximal one; server_opt
+    flips the server step to the adaptive optimizer — both off by default
+    (plain FedAvg math)."""
+    base = fl.make_strategy("hier_sfl")
+    assert base.mu == 0.0 and base.server_opt is None
+    assert base.init_state({"w": jnp.ones(2)}) is None
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    delta = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    strat = fl.make_strategy("hier_sfl", server_opt="yogi", server_lr=0.1)
+    state = strat.init_state(params)
+    p1, state = strat.server_update(params, delta, state)
+    assert int(state["t"]) == 1
+    # and matches the standalone fedopt strategy's step exactly
+    fo = fl.make_strategy("fedopt", server_opt="yogi", server_lr=0.1)
+    p2, _ = fo.server_update(params, delta, fo.init_state(params))
+    assert np.array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+
+def test_hier_server_opt_inherits_fedopt_lr_default():
+    """Composing the adaptive server step without an explicit --server-lr
+    must take FedOpt's own default (0.03), NOT the plain-apply 1.0 — an
+    AdamW step at lr=1.0 would silently be 33x the fedopt baseline."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    delta = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    hs = fl.make_strategy("hier_sfl", server_opt="adamw")
+    fo = fl.make_strategy("fedopt")
+    assert fo.server_lr == 0.03
+    p1, _ = hs.server_update(params, delta, hs.init_state(params))
+    p2, _ = fo.server_update(params, delta, fo.init_state(params))
+    assert np.array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    # while the plain apply keeps the FedAvg server_lr=1.0 semantics
+    plain, _ = fl.make_strategy("hier_sfl").server_update(params, delta,
+                                                          None)
+    want, _ = fl.make_strategy("sfl").server_update(params, delta, None)
+    assert np.array_equal(np.asarray(plain["w"]), np.asarray(want["w"]))
+
+
+def test_hier_mu_delegates_to_fedprox():
+    """The proximal composition is a delegation, not a copy: identical
+    deltas to the standalone fedprox strategy on the same batches."""
+    from repro import configs
+    from repro.data import femnist
+    from repro.models import femnist_cnn
+
+    cfg = configs.get("femnist_cnn").reduced()
+    params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(0))
+    clients, _ = femnist.generate(femnist.FemnistConfig(n_clients=1, seed=11))
+    batches = jax.tree.map(jnp.asarray, femnist.client_minibatches(
+        np.random.default_rng(0), clients[0], 3, 8))
+    flc = FLConfig(local_steps=3, local_batch=8, local_lr=0.05)
+    d1, _ = fl.make_strategy("hier_sfl", mu=0.3).local_update(
+        params, batches, femnist_cnn.loss_fn, flc)
+    d2, _ = fl.make_strategy("fedprox", mu=0.3).local_update(
+        params, batches, femnist_cnn.loss_fn, flc)
+    for a, b in zip(jax.tree.leaves(d1), jax.tree.leaves(d2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hier_round_on_skewed_forest():
+    """A custom MetroTopology with unequal trees routes every client to
+    the right tree (pon_of_onu + per-tree ONU bases, not division)."""
+    from repro.pon import Topology
+    from repro.pon.metro import simulate_hier_round
+
+    metro = MetroTopology(pons=(Topology.uniform(n_onus=2,
+                                                 clients_per_onu=3),
+                                Topology.uniform(n_onus=5,
+                                                 clients_per_onu=2)))
+    # global ONUs 0-1 (tree 0), 2-6 (tree 1); clients PON-major
+    onu_ids = np.array([0, 0, 0, 1, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6])
+    counts = np.random.default_rng(0).integers(50, 400, len(onu_ids))
+    cfg = PonConfig(n_onus=2, clients_per_onu=3, n_pons=2)
+    sel = np.arange(len(onu_ids))
+    for mode in ("classical", "sfl", "hier"):
+        rt = simulate_hier_round(cfg, np.random.default_rng(1), sel, onu_ids,
+                                 counts, mode, metro=metro)
+        assert rt["involved"].shape == (len(sel),)
+        assert rt["involved"].sum() > 0, mode
+    with pytest.raises(ValueError, match="out of range"):
+        simulate_hier_round(cfg, np.random.default_rng(1), sel,
+                            np.full(len(onu_ids), 7), counts, "hier",
+                            metro=metro)
+
+
+def test_simulate_round_rejects_overrides_on_forest():
+    from repro.pon import make_dba, simulate_round
+
+    cfg, onu, k = _setup(n_pons=2)
+    sel = _selected(cfg, per_pon=4)
+    with pytest.raises(ValueError, match="multi-PON"):
+        simulate_round(cfg, np.random.default_rng(0), sel, onu, k, "hier",
+                       dba=make_dba("tdma"))
+
+
+# ------------------------------------------------ multi-PON Orchestrator
+
+def _forest_exp(n_pons=3, strategy="hier_sfl", **exp_kw):
+    pon = PonConfig(n_onus=4, clients_per_onu=5, n_pons=n_pons)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_pons=n_pons,
+                   n_selected=4 * n_pons, pon=pon)
+    skw = fl.filter_strategy_kwargs(strategy, {"n_pons": n_pons})
+    exp = fl.ExperimentConfig(fl=flc, strategy=fl.canonical_name(strategy),
+                              strategy_kwargs=tuple(sorted(skw.items())),
+                              **exp_kw)
+    counts = np.random.default_rng(0).integers(
+        50, 400, flc.n_clients).astype(np.float32)
+    backend = fl.TransportBackend(fl.make_strategy(strategy, **skw), counts,
+                                  onu_of_client(flc))
+    return exp, backend
+
+
+def test_orchestrator_sync_policy_matches_roundloop_on_forest():
+    exp, backend = _forest_exp(n_pons=3, n_rounds=5)
+    _, backend2 = _forest_exp(n_pons=3)
+    want = fl.RoundLoop(exp, backend).run(5)
+    got = runtime.Orchestrator(exp, backend2, policy="sync").run(5)
+    stripped = [{k: v for k, v in r.items()
+                 if k not in ("t_s", "policy", "version")} for r in got]
+    assert stripped == want.records
+    # per-segment keys made it into the History rows
+    assert all(r["trunk_mbits"] == pytest.approx(
+        PonConfig().model_mbits) for r in want if r["involved"] > 0)
+
+
+@pytest.mark.parametrize("policy", ["semi_sync", "fedbuff"])
+@pytest.mark.parametrize("strategy", ["hier_sfl", "sfl", "classical"])
+def test_orchestrator_async_policies_cross_the_forest(policy, strategy):
+    """Async policies drive every transport over the forest: updates cross
+    PON + metro segments, arrive, and are aggregated; metro bits are
+    accounted separately from PON upstream bits."""
+    exp, backend = _forest_exp(n_pons=3, strategy=strategy, policy=policy,
+                               buffer_k=3, concurrency=6)
+    orch = runtime.Orchestrator(exp, backend)
+    hist = orch.run(4, until_s=500.0)
+    assert len(hist) >= 1
+    assert sum(r["involved"] for r in hist) > 0
+    assert orch.total_upstream_mbits > 0
+    assert orch.total_metro_mbits > 0
+    assert any("metro_mbits" in r for r in hist)
+    if strategy == "hier_sfl":
+        # OLT gather: never more metro bits than PON bits
+        assert orch.total_metro_mbits <= orch.total_upstream_mbits + 1e-9
+
+
+def test_orchestrator_hier_gather_batches_metro_jobs():
+    """When many θs land inside one OLT gather window, ONE Φ crosses the
+    metro segment — strictly fewer metro than PON jobs."""
+    exp, backend = _forest_exp(n_pons=2, strategy="hier_sfl",
+                               policy="semi_sync")
+    exp = dataclasses.replace(exp, onu_gather_s=20.0)   # wide gather windows
+    orch = runtime.Orchestrator(exp, backend)
+    orch.run(12)                                # 12 × 25 s deadline windows
+    model = PonConfig().model_mbits
+    assert orch.total_metro_mbits < orch.total_upstream_mbits
+    assert orch.total_metro_mbits >= model      # at least one Φ crossed
+
+
+# --------------------------------------------------------------- CLI path
+
+def test_cli_n_pons_flows_into_experiment():
+    import argparse
+    ap = argparse.ArgumentParser()
+    fl.add_experiment_cli_args(ap, strategy_default="hier_sfl")
+    args = ap.parse_args(["--n-pons", "4", "--metro-rate-mbps", "500",
+                          "--metro-latency-ms", "2.0"])
+    exp = fl.experiment_config_from_args(args)
+    assert exp.fl.n_pons == 4
+    assert exp.fl.n_clients == 4 * 16 * 20
+    assert dict(exp.strategy_kwargs)["n_pons"] == 4
+    pcfg = exp.fl.pon_config()
+    assert pcfg.metro_rate_mbps == 500.0
+    assert pcfg.metro_latency_s == pytest.approx(0.002)
+    strat = exp.make_strategy()
+    assert isinstance(strat, hier.HierSfl) and strat.n_pons == 4
