@@ -147,7 +147,8 @@ def main(argv=None, cached: str = "results/fig2c.json"):
         print(f"# final: classical {ca:.3f} vs {other[0]} {sa:.3f} "
               f"(+{100*(sa-ca)/max(ca,1e-9):.1f}% rel; paper: 0.77 vs 0.85, "
               f"+10%)  [{time.time()-t0:.0f}s]")
-    return rows_from_results(res)
+    from benchmarks import report
+    return report.attach_schema(rows_from_results(res), "accuracy")
 
 
 if __name__ == "__main__":

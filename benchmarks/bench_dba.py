@@ -80,21 +80,25 @@ def run(rounds: int = 8, seed: int = 0, n_selected: int = 96,
 
 
 def main(argv=None):
+    from benchmarks import report
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--n-selected", type=int, default=96)
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write rows as {'dba': [...]} JSON")
     args = ap.parse_args(argv)
     rows = run(rounds=args.rounds, seed=args.seed, n_selected=args.n_selected)
-    print(f"bench_dba (N={args.n_selected}, {args.rounds} rounds, "
-          f"sfl_queueing=True)")
-    print("dba,wavelengths,bg_load,classical_mbits,sfl_mbits,"
-          "classical_involved,sfl_involved,sfl_frac")
-    for r in rows:
-        print(f"{r['dba']},{r['wavelengths']},{r['bg_load']:.1f},"
-              f"{r['classical_mbits']:.0f},{r['sfl_mbits']:.0f},"
-              f"{r['classical_involved']:.1f},{r['sfl_involved']:.1f},"
-              f"{r['sfl_frac']:.2f}")
+    rows = report.emit_rows(
+        rows, "dba",
+        [("dba", ""), ("wavelengths", ""), ("bg_load", ".1f"),
+         ("classical_mbits", ".0f"), ("sfl_mbits", ".0f"),
+         ("classical_involved", ".1f"), ("sfl_involved", ".1f"),
+         ("sfl_frac", ".2f")],
+        header=f"bench_dba (N={args.n_selected}, {args.rounds} rounds, "
+               "sfl_queueing=True)",
+        json_out=args.json)
     # where the property holds / degrades, in one line each
     def _get(dba, w, load, key):
         return [r[key] for r in rows

@@ -171,21 +171,22 @@ def main(argv=None):
                     help="write rows as {'hierarchy': [...]} JSON")
     args = ap.parse_args(argv)
 
+    from benchmarks import report
+
     rows = run_transport(rounds=args.rounds, seed=args.seed,
                          per_pon_selected=args.per_pon_selected,
                          n_onus=args.onus,
                          clients_per_onu=args.clients_per_onu,
                          pons_list=tuple(args.pons))
-    print(f"bench_hierarchy (per-PON N={args.per_pon_selected}, "
-          f"{args.onus} ONUs × {args.clients_per_onu} clients per PON, "
-          f"{args.rounds} rounds)")
-    print("n_pons,mode,n_selected,involved_mean,pon_mbits,pon_mbits_max,"
-          "metro_mbits_max,trunk_mbits")
-    for r in rows:
-        print(f"{r['n_pons']},{r['mode']},{r['n_selected']},"
-              f"{r['involved_mean']:.1f},{r['pon_mbits']:.0f},"
-              f"{r['pon_mbits_max']:.0f},{r['metro_mbits_max']:.0f},"
-              f"{r['trunk_mbits']:.0f}")
+    rows = report.emit_rows(
+        rows, "hierarchy",
+        [("n_pons", ""), ("mode", ""), ("n_selected", ""),
+         ("involved_mean", ".1f"), ("pon_mbits", ".0f"),
+         ("pon_mbits_max", ".0f"), ("metro_mbits_max", ".0f"),
+         ("trunk_mbits", ".0f")],
+        header=f"bench_hierarchy (per-PON N={args.per_pon_selected}, "
+               f"{args.onus} ONUs × {args.clients_per_onu} clients per PON, "
+               f"{args.rounds} rounds)")
 
     # the headline, in one line: per-segment flat for hier, trunk growth
     # for the baselines
@@ -203,12 +204,12 @@ def main(argv=None):
           f"{_seg('classical', hi, 'trunk_mbits'):.0f} (grows)")
 
     if args.tta_rounds > 0:
-        tta = run_tta(rounds=args.tta_rounds, seed=args.seed,
-                      target_acc=args.target_acc)
-        print("n_pons,mode,t_to_target_s,final_acc,involved_mean")
-        for r in tta:
-            print(f"{r['n_pons']},{r['mode']},{r['t_to_target_s']:.0f},"
-                  f"{r['final_acc']:.3f},{r['involved_mean']:.1f}")
+        tta = report.emit_rows(
+            run_tta(rounds=args.tta_rounds, seed=args.seed,
+                    target_acc=args.target_acc),
+            "hierarchy",
+            [("n_pons", ""), ("mode", ""), ("t_to_target_s", ".0f"),
+             ("final_acc", ".3f"), ("involved_mean", ".1f")])
         rows = rows + [dict(r, kind="tta") for r in tta]
 
     if args.json:

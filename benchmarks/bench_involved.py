@@ -45,13 +45,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     add_pon_cli_args(ap)
     args = ap.parse_args(argv)
+    from benchmarks import report
+
     pon = pon_config_from_args(args)
-    print("bench_involved (Fig 2b)")
-    print("N,classical_mean,classical_min,classical_max,sfl_mean,sfl_frac")
-    rows = run(rounds=args.rounds, seed=args.seed, pon=pon)
-    for r in rows:
-        print(f"{r['N']},{r['classical_mean']:.1f},{r['classical_min']:.0f},"
-              f"{r['classical_max']:.0f},{r['sfl_mean']:.1f},{r['sfl_frac']:.2f}")
+    rows = report.emit_rows(
+        run(rounds=args.rounds, seed=args.seed, pon=pon),
+        "involved",
+        [("N", ""), ("classical_mean", ".1f"), ("classical_min", ".0f"),
+         ("classical_max", ".0f"), ("sfl_mean", ".1f"), ("sfl_frac", ".2f")],
+        header="bench_involved (Fig 2b)")
     print("# paper check: classical fluctuates in [1,20] independent of N; "
           "SFL involves ~all selected")
     return rows

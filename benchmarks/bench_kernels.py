@@ -1,6 +1,10 @@
 """Kernel micro-bench: us_per_call for the ONU aggregation + quantize ops
 (jnp reference path on CPU; Pallas interpret timings are not meaningful),
 plus derived wire-bytes — one row per transport variant.
+
+Per-rep wall times are recorded into the ambient ``repro.obs`` metrics
+registry (histograms ``kernels.<name>.us``) so a ``--metrics-out`` session
+wrapping the bench captures the full distribution, not just the mean.
 """
 from __future__ import annotations
 
@@ -11,21 +15,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs.context import get as _obs_get
 
 
-def _time(fn, *args, reps=5):
+def _time(name, fn, *args, reps=5):
+    """Mean µs/call over ``reps`` post-compile reps; each rep's wall time
+    also lands in the ambient obs histogram ``kernels.<name>.us``."""
+    hist = _obs_get().metrics.histogram(f"kernels.{name}.us")
     fn(*args)  # compile
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    per_rep = []
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        us = (time.perf_counter() - t0) * 1e6
+        per_rep.append(us)
+        hist.observe(us)
+    return float(np.mean(per_rep))
 
 
 def main():
-    print("bench_kernels")
-    print("name,us_per_call,derived")
+    from benchmarks import report
+
     key = jax.random.PRNGKey(0)
     # the paper's ONU AF over one ONU's clients (20 x 6.6M-param CNN)
     C, N = 20, 6_603_710
@@ -33,19 +44,21 @@ def main():
     w = jax.random.uniform(key, (C,)) * 100
     m = jnp.ones((C,))
     rows = []
-    us = _time(lambda a, b, c: ops.agg_reduce(a, b, c), x, w, m)
+    us = _time("agg_reduce", lambda a, b, c: ops.agg_reduce(a, b, c), x, w, m)
     rows.append({"name": "agg_reduce_onu20x6.6M", "us_per_call": us,
                  "derived": f"gbps={C*N*4/us/1e3:.1f}"})
-    q_us = _time(lambda a: ops.quantize_int8(a, key), x[0])
+    q_us = _time("quantize_int8", lambda a: ops.quantize_int8(a, key), x[0])
     rows.append({"name": "quantize_int8_6.6M", "us_per_call": q_us,
                  "derived": "wire_reduction=4x"})
     qq, ss = ops.quantize_int8(x[0], key)
-    d_us = _time(lambda a, s: ops.dequantize_int8(a, s), qq, ss)
+    d_us = _time("dequantize_int8",
+                 lambda a, s: ops.dequantize_int8(a, s), qq, ss)
     rows.append({"name": "dequantize_int8_6.6M", "us_per_call": d_us,
                  "derived": ""})
-    for r in rows:
-        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
-    return rows
+    return report.emit_rows(
+        rows, "kernels",
+        [("name", ""), ("us_per_call", ".0f"), ("derived", "")],
+        header="bench_kernels")
 
 
 if __name__ == "__main__":

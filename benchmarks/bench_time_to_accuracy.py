@@ -117,7 +117,6 @@ def run(rounds: int = 6, sim_s: float = None, target_acc: float = 0.10,
 
 def main(argv=None):
     import argparse
-    import json
 
     from repro import fl
     from repro.pon import pon_config_from_args
@@ -146,19 +145,16 @@ def main(argv=None):
                staleness_exp=args.staleness_exp,
                onu_gather_s=args.onu_gather_s, window_s=args.window_s)
 
-    print(f"bench_time_to_accuracy (budget {rows[0]['budget_s']:.0f} sim-s, "
-          f"target acc {rows[0]['target_acc']:.2f})")
-    print("policy,mode,t_to_target_s,final_acc,n_updates,involved_mean,"
-          "staleness_mean,upstream_gbits")
-    for r in rows:
-        print(f"{r['policy']},{r['mode']},{r['t_to_target_s']:.1f},"
-              f"{r['final_acc']:.3f},{r['n_updates']},"
-              f"{r['involved_mean']:.1f},{r['staleness_mean']:.2f},"
-              f"{r['upstream_gbits']:.2f}")
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"time_to_accuracy": rows}, f, indent=2, default=float)
-        print(f"[json] wrote {len(rows)} rows to {args.json}")
+    from benchmarks import report
+
+    rows = report.emit_rows(
+        rows, "time_to_accuracy",
+        [("policy", ""), ("mode", ""), ("t_to_target_s", ".1f"),
+         ("final_acc", ".3f"), ("n_updates", ""), ("involved_mean", ".1f"),
+         ("staleness_mean", ".2f"), ("upstream_gbits", ".2f")],
+        header=f"bench_time_to_accuracy (budget {rows[0]['budget_s']:.0f} "
+               f"sim-s, target acc {rows[0]['target_acc']:.2f})",
+        json_out=args.json)
     return rows
 
 

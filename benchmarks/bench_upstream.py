@@ -46,13 +46,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     add_pon_cli_args(ap)
     args = ap.parse_args(argv)
-    rows = run(rounds=args.rounds, seed=args.seed,
-               pon=pon_config_from_args(args))
-    print("bench_upstream (Fig 2a)")
-    print("N,classical_mbits,sfl_mbits,sfl_int8_mbits,saving_pct")
-    for r in rows:
-        print(f"{r['N']},{r['classical_mbits']:.0f},{r['sfl_mbits']:.0f},"
-              f"{r['sfl_int8_mbits']:.0f},{r['saving_pct']:.1f}")
+    from benchmarks import report
+
+    rows = report.emit_rows(
+        run(rounds=args.rounds, seed=args.seed,
+            pon=pon_config_from_args(args)),
+        "upstream",
+        [("N", ""), ("classical_mbits", ".0f"), ("sfl_mbits", ".0f"),
+         ("sfl_int8_mbits", ".0f"), ("saving_pct", ".1f")],
+        header="bench_upstream (Fig 2a)")
     by_n = {r["N"]: r for r in rows}
     if 48 in by_n and 128 in by_n:
         print(f"# paper check: saving(N=48)={by_n[48]['saving_pct']:.1f}% "

@@ -73,6 +73,9 @@ def main() -> None:
         if rows is not None:
             collected[name] = rows
         print(f"=== {name} done in {time.time()-t0:.1f}s ===")
+    # every bench emits through report.emit_rows — enforce the uniform
+    # schema before anything lands in a BENCH_*.json artifact
+    report.assert_schema(collected)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(collected, f, indent=2, default=float)

@@ -34,7 +34,6 @@ Two optional extensions (implemented by ClientStacked/Transport, used by
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -44,6 +43,8 @@ import numpy as np
 from repro.core import fedavg
 from repro.core.fedavg import FLConfig
 from repro.data import femnist
+from repro.obs import profile
+from repro.obs.context import get as _obs_get
 
 from repro.fl.strategy import Strategy
 
@@ -73,7 +74,10 @@ class ClientStackedBackend:
         self._one_client = None     # lazily-jitted single-client update
 
     def _eval(self) -> Dict[str, float]:
-        loss, metrics = self.loss_fn(self.params, self.eval_batch)
+        obs = _obs_get()
+        (loss, metrics), _ = profile.timed(
+            "backend.eval_s", self.loss_fn, self.params, self.eval_batch,
+            metrics=obs.metrics, tracer=obs.tracer)
         out = {"eval_loss": float(loss)}
         out.update({k: float(v) for k, v in metrics.items()})
         self._last_eval = out
@@ -116,8 +120,11 @@ class ClientStackedBackend:
             lambda *xs: jnp.stack(xs),
             *[self.minibatch_fn(rng, self.clients[c], fl.local_steps,
                                 fl.local_batch) for c in padded])
-        deltas, _ = fedavg.train_selected_clients(
+        obs = _obs_get()
+        (deltas, _), _ = profile.timed(
+            "backend.train_s", fedavg.train_selected_clients,
             self.params, cb, self.loss_fn, fl,
+            metrics=obs.metrics, tracer=obs.tracer,
             local_update=self.strategy.local_update)
         return self._apply_and_eval(
             rnd, deltas, jnp.asarray(w),
@@ -242,10 +249,12 @@ class GradientBackend:
             "tokens": jnp.asarray(batch_np["tokens"]),
             "client_weight": jnp.asarray(weights, jnp.float32),
         }
-        t0 = time.time()
-        self.params, self.opt_state, loss = self.train_step(
-            self.params, self.opt_state, batch)
-        return {"loss": float(loss), "dt": time.time() - t0}
+        obs = _obs_get()
+        (self.params, self.opt_state, loss), dt = profile.timed(
+            "backend.train_step_s", self.train_step,
+            self.params, self.opt_state, batch,
+            metrics=obs.metrics, tracer=obs.tracer)
+        return {"loss": float(loss), "dt": dt}
 
 
 class TransportBackend:

@@ -75,11 +75,15 @@ class ExperimentConfig:
 def add_experiment_cli_args(ap, strategy_default: str = "sfl_two_step") -> None:
     """Attach the full federated-experiment flag set to an argparse parser.
 
-    Includes the PON transport flags (``add_pon_cli_args``) plus strategy /
-    selection / failure knobs. One definition shared by launch/train.py,
-    the benchmarks, and the examples so the flag set cannot drift.
+    Includes the PON transport flags (``add_pon_cli_args``), strategy /
+    selection / failure knobs, and the observability flags
+    (``--trace-out``/``--metrics-out``, ``repro.obs``). One definition
+    shared by launch/train.py, the benchmarks, and the examples so the
+    flag set cannot drift.
     """
+    from repro import obs
     add_pon_cli_args(ap)
+    obs.add_obs_cli_args(ap)
     g = ap.add_argument_group("federated experiment (repro.fl)")
     g.add_argument("--strategy", default=strategy_default,
                    help=f"aggregation strategy: {'|'.join(strategy_names())} "

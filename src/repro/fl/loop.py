@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.core import selection
+from repro.obs.context import Obs, get as _obs_get
 from repro.pon import round_times
 
 from repro.fl.config import ExperimentConfig
@@ -78,7 +79,7 @@ def _expand_rt(rt: Dict[str, Any], live: np.ndarray) -> Dict[str, Any]:
 
 
 def _transport_stage(cfg: ExperimentConfig, backend, failures,
-                     rng: np.random.Generator, rnd: int
+                     rng: np.random.Generator, rnd: int, obs=None
                      ) -> Tuple[np.ndarray, np.ndarray, Dict[str, Any]]:
     """selection → crash injection → PON transport → transient mask.
 
@@ -97,7 +98,8 @@ def _transport_stage(cfg: ExperimentConfig, backend, failures,
     live = (crash_alive[sel] if crash_alive is not None
             else np.ones(len(sel), bool))
     rt = round_times(fl.pon_config(), rng, sel[live], backend.onu_ids,
-                     backend.sample_counts, backend.strategy.transport)
+                     backend.sample_counts, backend.strategy.transport,
+                     obs=obs)
     if not live.all():
         rt = _expand_rt(rt, live)
     mask = np.asarray(rt["involved"], np.float32)
@@ -106,24 +108,58 @@ def _transport_stage(cfg: ExperimentConfig, backend, failures,
     return sel, mask, rt
 
 
+# History key → registry counter (window value IS the round's value) for
+# the per-segment accounting; maxima are point-in-round gauges
+_SEG_COUNTERS = {"upstream_mbits": "pon.upstream_mbits",
+                 "metro_mbits": "metro.mbits",
+                 "trunk_mbits": "trunk.mbits"}
+_SEG_GAUGES = {"pon_mbits_max": "pon.mbits_max",
+               "metro_mbits_max": "metro.mbits_max",
+               "n_pons": "fl.n_pons"}
+
+
 def sync_round(cfg: ExperimentConfig, backend, failures,
-               rng: np.random.Generator, rnd: int) -> Dict[str, Any]:
+               rng: np.random.Generator, rnd: int,
+               obs: Optional[Obs] = None) -> Dict[str, Any]:
     """One synchronous deadline round; returns the History record.
 
     The shared round pipeline behind both drivers (``RoundLoop`` and the
     Orchestrator's ``sync`` policy) — any change here changes both, which
     keeps them bit-for-bit interchangeable by construction.
+
+    All bandwidth accounting routes through ``obs.metrics`` (the registry
+    is the single source of truth): each segment's Mbits are added to its
+    counter and the History record reads the drained window back — one add
+    per take, so the record values are bit-for-bit the transport's floats
+    while ``counter.total`` accumulates the run totals for free.
     """
-    sel, mask, rt = _transport_stage(cfg, backend, failures, rng, rnd)
+    if obs is None:
+        obs = _obs_get()
+    trc = obs.tracer
+    if trc.enabled:
+        # retroactive spans inside this round land on a global timeline,
+        # offset to the round's start in the lockstep window cadence
+        window = cfg.fl.pon_config().sync_threshold_s
+        trc.offset_s = rnd * window
+        trc.add_span("round", 0.0, window, lane=("fl", "rounds"), cat="round",
+                     args={"round": rnd})
+    sel, mask, rt = _transport_stage(cfg, backend, failures, rng, rnd, obs)
     metrics = backend.run_round(rnd, sel, mask, rt, rng)
+    reg = obs.metrics
     rec = {"round": rnd, "n_selected": len(sel),
-           "involved": float(mask.sum()),
-           "upstream_mbits": float(rt["upstream_mbits"])}
-    # per-segment accounting from the hierarchical transport (DESIGN.md §12)
-    for key in ("pon_mbits_max", "metro_mbits", "metro_mbits_max",
-                "trunk_mbits", "n_pons"):
+           "involved": float(mask.sum())}
+    reg.histogram("fl.involved").observe(rec["involved"])
+    # per-segment accounting from the transport (DESIGN.md §12)
+    for key, cname in _SEG_COUNTERS.items():
         if key in rt:
-            rec[key] = float(rt[key])
+            c = reg.counter(cname)
+            c.add(float(rt[key]))
+            rec[key] = c.take()
+    for key, gname in _SEG_GAUGES.items():
+        if key in rt:
+            g = reg.gauge(gname)
+            g.set(float(rt[key]))
+            rec[key] = g.value
     rec.update(metrics)
     return rec
 
@@ -138,7 +174,10 @@ def replay_sync_round(cfg: ExperimentConfig, backend, failures,
     FailureModel — in the identical state an uninterrupted run would have
     reached, so resumed and uninterrupted trajectories match bit for bit.
     """
-    sel, mask, rt = _transport_stage(cfg, backend, failures, rng, rnd)
+    # replayed rounds are invisible to observability: a throwaway disabled
+    # Obs keeps fast-forward from double-emitting spans or skewing metrics
+    sel, mask, rt = _transport_stage(cfg, backend, failures, rng, rnd,
+                                     obs=Obs())
     replay = getattr(backend, "replay_round", None)
     if replay is not None:
         replay(rnd, sel, mask, rt, rng)
@@ -169,13 +208,17 @@ class RoundLoop:
     """
 
     def __init__(self, cfg: ExperimentConfig, backend,
-                 callbacks: Iterable[Callback] = ()):
+                 callbacks: Iterable[Callback] = (),
+                 obs: Optional[Obs] = None):
         self.cfg = cfg
         self.backend = backend
         self.callbacks: List[Callback] = list(callbacks)
         self.rng = np.random.default_rng(cfg.seed)
         self.failures = cfg.make_failure_model()
         self.history = History()
+        # private registry (sweeps build many loops; run totals must not
+        # bleed across them) sharing the ambient tracer (one timeline)
+        self.obs = obs if obs is not None else Obs(tracer=_obs_get().tracer)
         self.rounds_consumed = 0    # rounds whose RNG draws have been used
         n = cfg.fl.n_clients
         if len(backend.sample_counts) < n or len(backend.onu_ids) < n:
@@ -189,8 +232,18 @@ class RoundLoop:
     def strategy(self):
         return self.backend.strategy
 
+    @property
+    def metrics(self):
+        """The loop's private MetricsRegistry (accounting source of truth)."""
+        return self.obs.metrics
+
+    @property
+    def total_upstream_mbits(self) -> float:
+        return self.obs.metrics.counter("pon.upstream_mbits").total
+
     def run_round(self, rnd: int) -> Dict[str, Any]:
-        rec = sync_round(self.cfg, self.backend, self.failures, self.rng, rnd)
+        rec = sync_round(self.cfg, self.backend, self.failures, self.rng, rnd,
+                         obs=self.obs)
         self.rounds_consumed += 1
         self.history.append(rec)
         for cb in self.callbacks:

@@ -15,6 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.profile import named_scope
+
 from repro.kernels import ref
 from repro.kernels.agg_reduce import agg_reduce as _agg_pallas
 from repro.kernels.quantize import quantize_int8 as _quant_pallas
@@ -37,51 +39,62 @@ def _mode(use_pallas: Optional[bool]) -> str:
     return "ref"
 
 
+# jax.named_scope names the HLO emitted under each kernel, so device
+# profiles (and jax.profiler captures) show agg_reduce/quantize/... as
+# named regions regardless of dispatch mode — the in-jit counterpart of
+# repro.obs.profile.annotate
+
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def agg_reduce(x, weights, mask, use_pallas: Optional[bool] = None):
-    m = _mode(use_pallas)
-    if m == "ref":
-        return ref.agg_reduce_ref(x, weights, mask)
-    return _agg_pallas(x, weights, mask, interpret=(m == "interpret"))
+    with named_scope("kernels.agg_reduce"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.agg_reduce_ref(x, weights, mask)
+        return _agg_pallas(x, weights, mask, interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def quantize_int8(x, key, use_pallas: Optional[bool] = None):
-    m = _mode(use_pallas)
-    if m == "ref":
-        return ref.quantize_int8_ref(x, key)
-    return _quant_pallas(x, key, interpret=(m == "interpret"))
+    with named_scope("kernels.quantize_int8"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.quantize_int8_ref(x, key)
+        return _quant_pallas(x, key, interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def dequantize_int8(q, scale, use_pallas: Optional[bool] = None):
-    m = _mode(use_pallas)
-    if m == "ref":
-        return ref.dequantize_int8_ref(q, scale)
-    return _dequant_pallas(q, scale, interpret=(m == "interpret"))
+    with named_scope("kernels.dequantize_int8"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.dequantize_int8_ref(q, scale)
+        return _dequant_pallas(q, scale, interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     use_pallas: Optional[bool] = None):
-    m = _mode(use_pallas)
-    if m == "ref":
-        return ref.attention_ref(q, k, v, causal=causal, window=window)
-    return _flash_pallas(q, k, v, causal=causal, window=window,
-                         interpret=(m == "interpret"))
+    with named_scope("kernels.flash_attention"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.attention_ref(q, k, v, causal=causal, window=window)
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def rglru_scan(a, b, h0=None, use_pallas: Optional[bool] = None):
-    m = _mode(use_pallas)
-    if m == "ref":
-        return ref.rglru_scan_ref(a, b, h0)
-    return _rglru_pallas(a, b, h0, interpret=(m == "interpret"))
+    with named_scope("kernels.rglru_scan"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.rglru_scan_ref(a, b, h0)
+        return _rglru_pallas(a, b, h0, interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def rwkv6_scan(r, k, v, logw, u, use_pallas: Optional[bool] = None):
-    m = _mode(use_pallas)
-    if m == "ref":
-        return ref.rwkv6_ref(r, k, v, logw, u)
-    return _rwkv_pallas(r, k, v, logw, u, interpret=(m == "interpret"))
+    with named_scope("kernels.rwkv6_scan"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.rwkv6_ref(r, k, v, logw, u)
+        return _rwkv_pallas(r, k, v, logw, u, interpret=(m == "interpret"))

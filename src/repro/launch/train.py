@@ -24,10 +24,11 @@ import argparse
 import jax
 import numpy as np
 
-from repro import configs, fl
+from repro import configs, fl, obs
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.common.sharding import ShardingRules
 from repro.launch.mesh import make_test_mesh
+from repro.obs import obs_logging
 
 
 def build_rules(mesh, transport: str) -> ShardingRules:
@@ -63,10 +64,14 @@ def main():
                          "event-driven runtime Orchestrator (--policy picks "
                          "the aggregation policy; GradientBackend is "
                          "sync-only)")
-    # strategy / PON transport / fault-tolerance knobs — the shared
-    # repro.fl flag set (also on bench_accuracy and the examples)
+    # strategy / PON transport / fault-tolerance / observability knobs —
+    # the shared repro.fl flag set (also on bench_accuracy and the examples)
     fl.add_experiment_cli_args(ap)
+    obs_logging.add_logging_cli_args(ap)
     args = ap.parse_args()
+
+    logger = obs_logging.logger_from_args(args)
+    sess = obs.session_from_args(args)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     exp = fl.experiment_config_from_args(args, n_rounds=args.steps)
@@ -95,16 +100,12 @@ def main():
                 (backend.params, backend.opt_state), extra, step0 = \
                     restore_checkpoint(args.ckpt, last,
                                        (backend.params, backend.opt_state))
-                print(f"[restore] resumed from step {step0}")
+                logger.info("[restore] resumed from step %d", step0)
 
         def on_round(loop, rec):
             step = rec["round"]
             if step % args.log_every == 0 or step == args.steps - 1:
-                sim = f" t_sim {rec['t_s']:.0f}s" if "t_s" in rec else ""
-                print(f"step {step:5d} loss {rec['loss']:.4f} "
-                      f"involved {int(rec['involved'])}/{rec['n_selected']} "
-                      f"upstream {rec['upstream_mbits']:.0f} Mb "
-                      f"dt {rec['dt']:.2f}s{sim}")
+                obs_logging.log_round(logger, rec)
             if args.ckpt and (step + 1) % args.ckpt_every == 0:
                 save_checkpoint(args.ckpt, step + 1,
                                 (backend.params, backend.opt_state))
@@ -115,15 +116,18 @@ def main():
         remaining = max(0, args.steps - step0)
         if args.driver == "runtime":
             from repro import runtime
-            orch = runtime.Orchestrator(exp, backend, callbacks=[on_round])
+            orch = runtime.Orchestrator(exp, backend, callbacks=[on_round],
+                                        obs=sess.obs)
             orch.run(remaining, start_round=step0)
         else:
-            loop = fl.RoundLoop(exp, backend, callbacks=[on_round])
+            loop = fl.RoundLoop(exp, backend, callbacks=[on_round],
+                                obs=sess.obs)
             loop.run(remaining, start_round=step0)
         if args.ckpt:
             save_checkpoint(args.ckpt, args.steps,
                             (backend.params, backend.opt_state))
-            print(f"[ckpt] saved final at step {args.steps}")
+            logger.info("[ckpt] saved final at step %d", args.steps)
+        sess.finish()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,116 @@
+"""repro.obs — unified tracing, metrics, and profiling for the FL/PON stack.
+
+    from repro import obs
+
+    sess = obs.session(trace_out="trace.json", metrics_out="metrics.jsonl")
+    loop = fl.RoundLoop(exp, backend, obs=sess.obs)
+    loop.run()
+    sess.finish()          # writes trace.json (open in ui.perfetto.dev)
+
+Three pillars (DESIGN.md §13):
+
+  * **Tracer** — span-based, on BOTH clocks: simulated seconds (SimClock /
+    UpstreamSim event times: grant spans per ONU, θ/Φ/Ψ gather windows,
+    client dispatch→train→wireless legs) and wall seconds (backend
+    train/eval, kernel timings). Chrome-trace exporter, Perfetto-loadable.
+    The default is a zero-overhead no-op; hot paths gate on
+    ``tracer.enabled``.
+  * **MetricsRegistry** — counters (window + monotonic total), gauges,
+    bounded histograms. The drivers' source of truth for all bandwidth
+    accounting: the legacy ``*_mbits`` History values are now *read from*
+    the registry, pinned bit-for-bit.
+  * **profile / logging** — jax profiler annotations (``named_scope``
+    inside jit, ``TraceAnnotation`` host-side) and the shared stdlib
+    logging setup behind ``--log-level``/``--log-json``.
+
+CLI: ``add_obs_cli_args`` contributes ``--trace-out``/``--metrics-out``
+(attached by the shared experiment flag set), ``session_from_args`` builds
+and installs the session.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.context import Obs, get, install, metrics, tracer, use
+from repro.obs.metrics import (SCHEMA, Counter, Gauge, Histogram,
+                               MetricsRegistry, read_jsonl)
+from repro.obs.tracer import NOOP_TRACER, NoopTracer, Span, Tracer
+from repro.obs import logging as obs_logging
+from repro.obs import profile
+
+
+class ObsSession:
+    """An Obs bundle plus its output destinations; ``finish()`` flushes."""
+
+    def __init__(self, obs: Obs, trace_out: Optional[str] = None,
+                 metrics_out: Optional[str] = None, installed: bool = False):
+        self.obs = obs
+        self.trace_out = trace_out
+        self.metrics_out = metrics_out
+        self._installed = installed
+        self._prev = None
+
+    @property
+    def tracer(self):
+        return self.obs.tracer
+
+    @property
+    def metrics(self) -> MetricsRegistry:
+        return self.obs.metrics
+
+    def finish(self, quiet: bool = False) -> None:
+        """Write the configured artifacts and restore the prior context."""
+        if self.trace_out:
+            self.obs.tracer.write(self.trace_out)
+            if not quiet:
+                print(f"[obs] wrote {len(getattr(self.obs.tracer, 'spans', ()))} "
+                      f"spans to {self.trace_out} "
+                      "(open in https://ui.perfetto.dev)")
+        if self.metrics_out:
+            self.obs.metrics.write_jsonl(self.metrics_out)
+            if not quiet:
+                print(f"[obs] wrote {len(self.obs.metrics.records())} metrics "
+                      f"to {self.metrics_out}")
+        if self._installed:
+            install(self._prev)
+            self._installed = False
+
+
+def session(trace_out: Optional[str] = None,
+            metrics_out: Optional[str] = None,
+            do_install: bool = True) -> ObsSession:
+    """Build an ObsSession: a live tracer iff ``trace_out`` is set (the
+    no-op tracer otherwise), always a fresh registry; installed as the
+    ambient context by default so deep call sites see it."""
+    obs = Obs.enabled_tracing() if trace_out else Obs.disabled()
+    sess = ObsSession(obs, trace_out, metrics_out, installed=do_install)
+    if do_install:
+        sess._prev = install(obs)
+    return sess
+
+
+def add_obs_cli_args(ap) -> None:
+    """--trace-out/--metrics-out (one definition for every driver CLI)."""
+    g = ap.add_argument_group("observability (repro.obs)")
+    g.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                   help="write a Chrome/Perfetto trace of the run "
+                        "(grant spans per ONU, tier aggregation windows, "
+                        "wall-clock compute lanes)")
+    g.add_argument("--metrics-out", default=None, metavar="METRICS.jsonl",
+                   help="write the run's MetricsRegistry as JSONL")
+
+
+def session_from_args(args) -> ObsSession:
+    """The session selected by ``add_obs_cli_args`` flags, installed."""
+    return session(trace_out=getattr(args, "trace_out", None),
+                   metrics_out=getattr(args, "metrics_out", None))
+
+
+__all__ = [
+    "Obs", "ObsSession", "session", "session_from_args", "add_obs_cli_args",
+    "get", "install", "use", "tracer", "metrics",
+    "SCHEMA", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "read_jsonl",
+    "NOOP_TRACER", "NoopTracer", "Span", "Tracer",
+    "obs_logging", "profile",
+]

@@ -1,0 +1,215 @@
+"""MetricsRegistry — counters, gauges, histograms with one ownership rule.
+
+Each driver (``RoundLoop``, ``Orchestrator``) owns ONE registry and it is
+the *source of truth* for everything the driver used to hand-account in
+ad-hoc floats (``_mbits_acc``-style): transport code adds into counters,
+and the History rows / run totals are *read back out* of the registry.
+
+:class:`Counter` therefore keeps two accumulators fed by the identical
+``+=`` sequence:
+
+  * ``total``  — monotonic over the run (the old ``total_upstream_mbits``)
+  * ``take()`` — drains the since-last-take window (the old per-row
+    ``_mbits_acc`` drain)
+
+so replacing the hand-rolled floats with a counter is bit-for-bit: the
+same adds in the same order land in both accumulators (pinned by
+tests/test_obs.py against the legacy ``*_mbits`` History values).
+
+Histograms keep exact count/sum/min/max plus a bounded sample reservoir —
+distribution summaries (straggler/staleness spread, DBA queue depth,
+kernel step times) without unbounded memory on long runs.
+
+Exporters: ``summary()`` (flat dict, attached to benchmark rows) and
+``write_jsonl()`` (one JSON object per metric, machine-diffable across
+PRs).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+# every metrics artifact this repo emits carries this schema tag so
+# downstream tooling (CI asserts, BENCH_*.json diffs) can key on it
+SCHEMA = "repro.obs/v1"
+
+
+class Counter:
+    """Monotonic total + drainable window, fed by one ``add`` sequence."""
+
+    __slots__ = ("name", "total", "_window", "n")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.total = 0.0
+        self._window = 0.0
+        self.n = 0
+
+    def add(self, v: float = 1.0) -> None:
+        v = float(v)
+        self.total += v
+        self._window += v
+        self.n += 1
+
+    def take(self) -> float:
+        """Drain and return the since-last-take window."""
+        v, self._window = self._window, 0.0
+        return v
+
+    def peek(self) -> float:
+        return self._window
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": "counter", "name": self.name, "total": self.total,
+                "n": self.n}
+
+
+class Gauge:
+    """Last-set value with running min/max."""
+
+    __slots__ = ("name", "value", "min", "max", "n")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.n = 0
+
+    def set(self, v: float) -> None:
+        v = float(v)
+        self.value = v
+        self.min = v if v < self.min else self.min
+        self.max = v if v > self.max else self.max
+        self.n += 1
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": "gauge", "name": self.name, "value": self.value,
+                "min": self.min if self.n else None,
+                "max": self.max if self.n else None, "n": self.n}
+
+
+class Histogram:
+    """Exact moments + a bounded deterministic sample reservoir.
+
+    The reservoir keeps the first ``max_samples`` observations and then
+    every k-th (k doubling), so quantiles stay representative on long
+    runs without the O(n) memory of keeping everything. Deterministic —
+    no RNG — so two identical runs export identical summaries.
+    """
+
+    __slots__ = ("name", "count", "sum", "min", "max", "samples",
+                 "_stride", "_max", "_i")
+
+    def __init__(self, name: str, max_samples: int = 4096):
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.samples: List[float] = []
+        self._stride = 1
+        self._max = max_samples
+        self._i = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        self.min = v if v < self.min else self.min
+        self.max = v if v > self.max else self.max
+        if self._i % self._stride == 0:
+            if len(self.samples) >= self._max:
+                # thin: keep every other retained sample, double the stride
+                self.samples = self.samples[::2]
+                self._stride *= 2
+            self.samples.append(v)
+        self._i += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        s = sorted(self.samples)
+        idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+        return s[idx]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": "histogram", "name": self.name, "count": self.count,
+                "mean": self.mean,
+                "min": self.min if self.count else None,
+                "max": self.max if self.count else None,
+                "p50": self.quantile(0.5), "p90": self.quantile(0.9),
+                "p99": self.quantile(0.99)}
+
+
+class MetricsRegistry:
+    """Get-or-create named metric instruments + exporters."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    # --- instruments -----------------------------------------------------
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name)
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = Histogram(name)
+        return h
+
+    def names(self) -> List[str]:
+        return sorted([*self._counters, *self._gauges, *self._hists])
+
+    # --- exporters -------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        """Flat {metric: value} dict: counter totals, gauge values, and
+        histogram count/mean/p50/p90/p99/max columns."""
+        out: Dict[str, Any] = {"obs_schema": SCHEMA}
+        for name, c in sorted(self._counters.items()):
+            out[name] = c.total
+        for name, g in sorted(self._gauges.items()):
+            out[name] = g.value
+        for name, h in sorted(self._hists.items()):
+            d = h.to_dict()
+            for k in ("count", "mean", "p50", "p90", "p99", "max"):
+                out[f"{name}.{k}"] = d[k]
+        return out
+
+    def records(self) -> List[Dict[str, Any]]:
+        """One dict per instrument (the JSONL rows)."""
+        rows = [i.to_dict() for _, i in sorted(self._counters.items())]
+        rows += [i.to_dict() for _, i in sorted(self._gauges.items())]
+        rows += [i.to_dict() for _, i in sorted(self._hists.items())]
+        for r in rows:
+            r["obs_schema"] = SCHEMA
+        return rows
+
+    def write_jsonl(self, path: str) -> str:
+        with open(path, "w") as f:
+            for rec in self.records():
+                f.write(json.dumps(rec, default=float) + "\n")
+        return path
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Load a ``write_jsonl`` artifact back (for tests / report tooling)."""
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]

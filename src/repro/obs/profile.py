@@ -1,0 +1,80 @@
+"""JAX profiler shims + wall-time capture for the compute side.
+
+Two complementary mechanisms:
+
+  * :func:`annotate` — a ``jax.profiler.TraceAnnotation`` context (named
+    interval in a captured XLA profile) for *host-side* regions: backend
+    train/eval calls, kernel dispatch in the benchmarks. Degrades to a
+    no-op when the profiler API is unavailable, so library code can wrap
+    unconditionally.
+  * :func:`named_scope` — ``jax.named_scope`` for *traced* code: inside a
+    ``jit`` the annotation attaches to the emitted HLO ops, which is how
+    ``agg_reduce``/``quantize`` show up as named regions in device
+    profiles (``repro.kernels.ops`` wraps every public kernel).
+
+:func:`timed` measures one callable's wall time — blocking on JAX arrays
+so compile + dispatch + execute are all inside the measurement — and
+feeds both a registry histogram and (optionally) a tracer wall span. The
+first call through a jitted function is its compile; callers that want
+compile vs steady-state split simply time the first call separately
+(``benchmarks/bench_kernels.py`` does).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable, Optional, Tuple
+
+try:
+    import jax
+    _TraceAnnotation = getattr(jax.profiler, "TraceAnnotation", None)
+    _named_scope = getattr(jax, "named_scope", None)
+except Exception:                                   # pragma: no cover
+    jax = None
+    _TraceAnnotation = None
+    _named_scope = None
+
+_NULL = contextlib.nullcontext()
+
+
+def annotate(name: str):
+    """Host-side profiler annotation (no-op without jax.profiler)."""
+    if _TraceAnnotation is None:
+        return _NULL
+    return _TraceAnnotation(name)
+
+
+def named_scope(name: str):
+    """Trace-time scope: names the HLO emitted under it (no-op shim)."""
+    if _named_scope is None:
+        return _NULL
+    return _named_scope(name)
+
+
+def _block(x: Any) -> Any:
+    if jax is not None:
+        try:
+            return jax.block_until_ready(x)
+        except Exception:
+            pass
+    return x
+
+
+def timed(name: str, fn: Callable, *args,
+          metrics=None, tracer=None, **kwargs) -> Tuple[Any, float]:
+    """Run ``fn(*args, **kwargs)`` under a profiler annotation, blocking on
+    the result; returns ``(result, wall_seconds)`` and records the timing
+    into ``metrics.histogram(name)`` / a tracer wall span when given."""
+    t0 = time.perf_counter()
+    with annotate(name):
+        out = _block(fn(*args, **kwargs))
+    dt = time.perf_counter() - t0
+    if metrics is not None:
+        metrics.histogram(name).observe(dt)
+    if tracer is not None and tracer.enabled:
+        # _wall_now pre-subtracts offset_s exactly because add_span re-adds
+        # it — wall lanes always land at true host time
+        now = tracer._wall_now()
+        tracer.add_span(name, now - dt, now, lane=("wall", "compute"),
+                        cat="profile")
+    return out, dt

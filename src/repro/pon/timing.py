@@ -140,7 +140,8 @@ def train_times(sample_counts: np.ndarray) -> np.ndarray:
 
 def round_times(cfg: PonConfig, rng: np.random.Generator,
                 selected: np.ndarray, onu_ids: np.ndarray,
-                sample_counts: np.ndarray, mode: str) -> Dict[str, np.ndarray]:
+                sample_counts: np.ndarray, mode: str,
+                obs=None) -> Dict[str, np.ndarray]:
     """Simulate one round; returns per-selected-client completion/involvement.
 
     Thin compatibility wrapper over the event-driven simulator
@@ -153,7 +154,7 @@ def round_times(cfg: PonConfig, rng: np.random.Generator,
     """
     from repro.pon import events
     return events.simulate_round(cfg, rng, selected, onu_ids, sample_counts,
-                                 mode)
+                                 mode, obs=obs)
 
 
 def round_times_fifo(cfg: PonConfig, rng: np.random.Generator,

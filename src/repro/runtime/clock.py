@@ -42,6 +42,7 @@ class SimClock:
         self.now = float(start_s)
         self._heap: List[ScheduledEvent] = []
         self._seq = itertools.count()
+        self.events_fired = 0       # lifetime count of callbacks run
 
     def schedule(self, t: float, fn: Callable, *args: Any) -> ScheduledEvent:
         """Schedule ``fn(*args)`` at simulated time ``t`` (>= now)."""
@@ -64,6 +65,7 @@ class SimClock:
             return False
         ev = heapq.heappop(self._heap)
         self.now = ev.t
+        self.events_fired += 1
         ev.fn(*ev.args)
         return True
 

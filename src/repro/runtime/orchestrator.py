@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.fl.config import ExperimentConfig
 from repro.fl.loop import Callback, History
+from repro.obs.context import Obs, get as _obs_get
 from repro.pon.dba import make_dba
 from repro.pon.events import UpstreamJob, UpstreamSim
 from repro.pon.metro import MetroTopology
@@ -63,10 +64,14 @@ class _BridgedSim:
     with dispatches, gather windows, and every other sim on the clock.
     """
 
-    def __init__(self, clock: SimClock, topology: Topology, dba, on_done):
+    def __init__(self, clock: SimClock, topology: Topology, dba, on_done,
+                 tracer=None, metrics=None, lane: str = "pon",
+                 tid_prefix: str = "onu"):
         self.clock = clock
         self.topology = topology
-        self.sim = UpstreamSim(topology, dba, on_done=on_done)
+        self.sim = UpstreamSim(topology, dba, on_done=on_done,
+                               tracer=tracer, metrics=metrics, lane=lane,
+                               tid_prefix=tid_prefix)
         self._ev = None
 
     def submit(self, job: UpstreamJob) -> None:
@@ -92,10 +97,14 @@ class Orchestrator:
 
     def __init__(self, cfg: ExperimentConfig, backend,
                  callbacks: Iterable[Callback] = (),
-                 policy: Optional[str] = None):
+                 policy: Optional[str] = None,
+                 obs: Optional[Obs] = None):
         self.cfg = cfg
         self.backend = backend
         self.callbacks: List[Callback] = list(callbacks)
+        # private registry (sweeps build many orchestrators; run totals must
+        # not bleed) sharing the ambient tracer — one simulated timeline
+        self.obs = obs if obs is not None else Obs(tracer=_obs_get().tracer)
         self.policy: AggregationPolicy = make_policy(
             policy if policy is not None else cfg.policy)
         self.rng = np.random.default_rng(cfg.seed)
@@ -129,18 +138,35 @@ class Orchestrator:
         self._olt_gather: Dict[int, Any] = {}   # OLT Φ gather (pon index)
         self._jobseq = itertools.count()
         self._train_s: Optional[np.ndarray] = None
-        self._mbits_acc = 0.0       # drained into each History row
-        self._metro_acc = 0.0
-        # monotonic run totals — unlike the per-row accumulators these never
-        # lose the bits served after the last server update
-        self.total_upstream_mbits = 0.0
-        self.total_metro_mbits = 0.0
+        # registry counters are the accounting source of truth: the window
+        # is drained into each History row (take_*), while .total keeps the
+        # monotonic run total — same += sequence, one authority
+        reg = self.obs.metrics
+        self._c_up = reg.counter("pon.upstream_mbits")
+        self._c_metro = reg.counter("metro.mbits")
+        self._h_staleness = reg.histogram("fl.staleness")
+        self._h_involved = reg.histogram("fl.involved")
         self._crash_alive: Optional[np.ndarray] = None
         self._transient_alive: Optional[np.ndarray] = None
 
     @property
     def strategy(self):
         return self.backend.strategy
+
+    @property
+    def metrics(self):
+        """The orchestrator's private MetricsRegistry."""
+        return self.obs.metrics
+
+    @property
+    def total_upstream_mbits(self) -> float:
+        """Monotonic run total — never loses the bits served after the
+        last server update (unlike the per-row drained windows)."""
+        return self._c_up.total
+
+    @property
+    def total_metro_mbits(self) -> float:
+        return self._c_metro.total
 
     def emit(self, rec: Dict[str, Any]) -> None:
         self.history.append(rec)
@@ -164,13 +190,20 @@ class Orchestrator:
     def setup_transport(self) -> None:
         pon = self.pon_cfg
         self.metro_topology = MetroTopology.from_config(pon)
+        # the incremental sims emit grant spans LIVE at completion events
+        # (the batch path emits retroactively instead — never both)
+        trc = self.obs.tracer if self.obs.tracer.enabled else None
+        reg = self.obs.metrics
         self._pons = [_BridgedSim(self.clock, topo, make_dba(pon.dba),
-                                  self._pon_job_done)
-                      for topo in self.metro_topology.pons]
+                                  self._pon_job_done, tracer=trc,
+                                  metrics=reg, lane=f"pon{p}")
+                      for p, topo in enumerate(self.metro_topology.pons)]
         # single-PON forests have no metro tier — the OLT is the server edge
         self._metro = (_BridgedSim(self.clock,
                                    self.metro_topology.metro_segment(),
-                                   make_dba(pon.dba), self._metro_job_done)
+                                   make_dba(pon.dba), self._metro_job_done,
+                                   tracer=trc, metrics=reg, lane="metro",
+                                   tid_prefix="olt")
                        if pon.n_pons > 1 else None)
         self.topology = self._pons[0].topology   # degenerate-case alias
         self._traffic = BackgroundTraffic(pon.background_load,
@@ -190,8 +223,7 @@ class Orchestrator:
         if entry is None:
             return                  # background burst: contention only
         updates, on_arrival, fn, ctx = entry
-        self._mbits_acc += job.size_mbits
-        self.total_upstream_mbits += job.size_mbits
+        self._c_up.add(job.size_mbits)
         fn(job, updates, on_arrival, ctx)
 
     def _metro_job_done(self, job: UpstreamJob) -> None:
@@ -199,8 +231,7 @@ class Orchestrator:
         if entry is None:
             return
         updates, on_arrival, fn, ctx = entry
-        self._metro_acc += job.size_mbits
-        self.total_metro_mbits += job.size_mbits
+        self._c_metro.add(job.size_mbits)
         fn(job, updates, on_arrival, ctx)
 
     # --- per-leg completion handlers -------------------------------------
@@ -239,18 +270,23 @@ class Orchestrator:
         p = int(ctx)
         slot = self._olt_gather.get(p)
         if slot is None:
-            self._olt_gather[p] = (list(updates), on_arrival)
+            self._olt_gather[p] = (list(updates), on_arrival, self.clock.now)
             self.clock.after(self.cfg.onu_gather_s, self._close_olt_gather, p)
         else:
             slot[0].extend(updates)
 
     def _close_olt_gather(self, p: int) -> None:
-        ups, on_arrival = self._olt_gather.pop(p)
+        ups, on_arrival, t_open = self._olt_gather.pop(p)
         pon = self.pon_cfg
         job = UpstreamJob(seq=next(self._jobseq), onu=p,
                           size_mbits=pon.model_mbits,
                           ready_s=self.clock.now + pon.onu_agg_s,
                           kind="theta")
+        trc = self.obs.tracer
+        if trc.enabled:
+            trc.add_span("Φ-gather", t_open, job.ready_s,
+                         lane=("metro", f"olt{p}"), cat="agg",
+                         args={"thetas": len(ups)})
         self._submit(self._metro, job, ups, on_arrival,
                      self._finish_after_latency)
 
@@ -301,6 +337,12 @@ class Orchestrator:
 
     def _at_edge(self, up: ClientUpdate, on_arrival) -> None:
         up.t_edge = self.clock.now
+        trc = self.obs.tracer
+        if trc.enabled:
+            # dispatch → train → wireless leg, collapsed (one clock event)
+            trc.add_span("train+wireless", up.t_dispatch, up.t_edge,
+                         lane=("clients", f"c{up.client}"), cat="client",
+                         args={"version": up.version})
         pon = self.pon_cfg
         onu_g = int(self.backend.onu_ids[up.client])   # global ONU id
         p = onu_g // pon.n_onus                        # owning PON tree
@@ -318,20 +360,25 @@ class Orchestrator:
             # property, asynchronously
             slot = self._gather.get(onu_g)
             if slot is None:
-                self._gather[onu_g] = ([up], on_arrival)
+                self._gather[onu_g] = ([up], on_arrival, self.clock.now)
                 self.clock.after(self.cfg.onu_gather_s, self._close_gather,
                                  onu_g)
             else:
                 slot[0].append(up)
 
     def _close_gather(self, onu_g: int) -> None:
-        ups, on_arrival = self._gather.pop(onu_g)
+        ups, on_arrival, t_open = self._gather.pop(onu_g)
         pon = self.pon_cfg
         p = onu_g // pon.n_onus
         job = UpstreamJob(seq=next(self._jobseq), onu=onu_g % pon.n_onus,
                           size_mbits=pon.model_mbits,
                           ready_s=self.clock.now + pon.onu_agg_s,
                           kind="theta")
+        trc = self.obs.tracer
+        if trc.enabled:
+            trc.add_span("θ-gather", t_open, job.ready_s,
+                         lane=(f"pon{p}", f"onu{job.onu}"), cat="agg",
+                         args={"clients": len(ups)})
         if self._metro is None:
             fn = self._finish       # the OLT is the server edge
         elif self.strategy.transport == "hier":
@@ -341,12 +388,10 @@ class Orchestrator:
         self._submit(self._pons[p], job, ups, on_arrival, fn, ctx=p)
 
     def take_upstream_mbits(self) -> float:
-        v, self._mbits_acc = self._mbits_acc, 0.0
-        return v
+        return self._c_up.take()
 
     def take_metro_mbits(self) -> float:
-        v, self._metro_acc = self._metro_acc, 0.0
-        return v
+        return self._c_metro.take()
 
     def apply(self, rnd_label, updates: List[ClientUpdate],
               extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -360,6 +405,15 @@ class Orchestrator:
             [u.delta for u in updates], w)
         if updates:
             self.server_version += 1
+        self._h_involved.observe(float(len(updates)))
+        for s in stale:
+            self._h_staleness.observe(float(s))
+        trc = self.obs.tracer
+        if trc.enabled:
+            trc.instant("server-update", self.clock.now,
+                        lane=("server", "agg"),
+                        args={"version": self.server_version,
+                              "updates": len(updates)})
         rec = {"round": rnd_label, "t_s": self.clock.now,
                "policy": self.policy.name, "version": self.server_version,
                "involved": float(len(updates)),

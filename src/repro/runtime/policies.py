@@ -89,11 +89,14 @@ class SyncRounds(AggregationPolicy):
         o.rounds_consumed = fast_forward(o.cfg, o.backend, o.failures, o.rng,
                                          o.rounds_consumed, start_round)
         for rnd in range(start_round, start_round + n_updates):
-            rec = sync_round(o.cfg, o.backend, o.failures, o.rng, rnd)
+            # o.obs routes the round's accounting into the orchestrator's
+            # registry: the counter's add/take feeds rec AND accumulates
+            # o.total_upstream_mbits (a property over counter.total)
+            rec = sync_round(o.cfg, o.backend, o.failures, o.rng, rnd,
+                             obs=o.obs)
             o.rounds_consumed += 1
             if rec["involved"] > 0:     # the server model actually moved
                 o.server_version += 1
-            o.total_upstream_mbits += rec["upstream_mbits"]
             o.clock.run_until((rnd + 1) * o.window_s)
             rec["t_s"] = o.clock.now
             rec["policy"] = self.name
