@@ -1,10 +1,18 @@
 """Freeze EXPERIMENTS tables: corrected-parser cells (results/dryrun)
 preferred; v1-parser cells (results/dryrun_v1, collective bytes inflated
 ≤2x by the f32/AR-vs-RS host-compile artifacts) fill the gaps, marked †.
-Regenerate any row exactly with repro.launch.dryrun."""
+Regenerate any row exactly with repro.launch.dryrun.
+
+Rows emit through ``benchmarks.report.emit_rows`` like every other bench
+main — schema-stamped (``repro.bench/v1``) and machine-readable via
+``--json`` — in addition to the frozen markdown in results/tables.md.
+"""
+import argparse
 import glob
 import json
 import os
+
+from benchmarks import report
 
 
 def load(d, mark):
@@ -19,15 +27,49 @@ def load(d, mark):
     return out
 
 
-def main():
+def _flat_row(r, mesh):
+    """One schema-stampable flat dict per dry-run cell."""
+    m = r["memory"]
+    rf = r.get("roofline", {})
+    return {
+        "mesh": mesh, "arch": r["arch"], "shape": r["shape"],
+        "compile_s": r["compile_s"],
+        "args_gb": m["argument_gb"], "temp_gb": m["temp_gb"],
+        "micro": r.get("micro", 1),
+        "compute_s": rf.get("compute_s", 0),
+        "memory_fused_s": rf.get("memory_fused_s", rf.get("memory_s", 0)),
+        "collective_s": rf.get("collective_s", 0),
+        "dominant": rf.get("dominant_fused", rf.get("dominant", "—")),
+        "useful_ratio": r.get("useful_ratio", 0),
+        "roofline_frac": rf.get("roofline_frac_fused",
+                                rf.get("roofline_frac", 0)),
+        "src": r["_src"],
+    }
+
+
+_COLUMNS = [("mesh", ""), ("arch", ""), ("shape", ""), ("compile_s", ""),
+            ("args_gb", ".2f"), ("temp_gb", ".2f"), ("micro", ""),
+            ("compute_s", ".3f"), ("memory_fused_s", ".3f"),
+            ("collective_s", ".3f"), ("dominant", ""),
+            ("useful_ratio", ".2f"), ("roofline_frac", ".3f"), ("src", "")]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="also write the schema-stamped rows as JSON")
+    args = ap.parse_args(argv)
+
     v1 = load("results/dryrun_v1", "†")
     v2 = load("results/dryrun", "")
     rows = {**v1, **v2}
+    flat = []
     lines = []
     for mesh in ("single", "multi"):
         sel = sorted([r for (a, s, m, mo), r in rows.items()
                       if m == mesh and mo == "sfl"],
                      key=lambda r: (r["arch"], r["shape"]))
+        flat += [_flat_row(r, mesh) for r in sel]
         lines.append(f"\n## {mesh}-pod mesh ({'16x16' if mesh=='single' else '2x16x16'})\n")
         lines.append("| arch | shape | compile s | args GB/dev | temp GB/dev | "
                      "micro | compute s | memory s (fused) | collective s | "
@@ -51,9 +93,14 @@ def main():
         lines.append(f"\n({len(sel)} cells; {n2} with the corrected parser, "
                      f"{len(sel)-n2} marked † from the v1 parser — collective "
                      f"column inflated ≤2x there)")
+    # the uniform emission path: schema stamp + stdout CSV + optional JSON
+    stamped = report.emit_rows(flat, "freeze_tables", _COLUMNS,
+                               header="\n=== freeze_tables (dry-run cells) ===",
+                               json_out=args.json)
     with open("results/tables.md", "w") as f:
         f.write("# Frozen dry-run / roofline tables\n" + "\n".join(lines) + "\n")
     print(f"froze {len(rows)} cells -> results/tables.md")
+    return stamped
 
 
 if __name__ == "__main__":

@@ -36,7 +36,18 @@ def main() -> None:
                     help="accuracy bench rounds (forces recompute)")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="write per-bench rows as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="one merged Chrome/Perfetto trace for the whole "
+                         "sweep (every bench's drivers share the session "
+                         "tracer)")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.jsonl",
+                    help="one merged MetricsRegistry artifact for the whole "
+                         "sweep (per-driver registries folded at exit)")
     args = ap.parse_args()
+
+    from repro import obs
+    sess = obs.session(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out, driver="bench_sweep")
 
     from benchmarks import (bench_accuracy, bench_dba, bench_hierarchy,
                             bench_involved, bench_kernels,
@@ -76,6 +87,7 @@ def main() -> None:
     # every bench emits through report.emit_rows — enforce the uniform
     # schema before anything lands in a BENCH_*.json artifact
     report.assert_schema(collected)
+    sess.finish()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(collected, f, indent=2, default=float)

@@ -36,12 +36,13 @@ def main():
     import jax
     import jax.numpy as jnp
 
-    from repro import configs, runtime
+    from repro import configs, obs, runtime
     from repro.core.fedavg import FLConfig
     from repro.data import femnist
     from repro.models import femnist_cnn
     from repro.pon import pon_config_from_args
 
+    sess = obs.session_from_args(args, driver="orchestrator")
     pon = pon_config_from_args(args)
     cfg = configs.get("femnist_cnn").reduced()
     flc = FLConfig(n_onus=pon.n_onus, clients_per_onu=pon.clients_per_onu,
@@ -74,6 +75,7 @@ def main():
           f"bg_load={pon.background_load})")
     hist = runtime.Orchestrator(exp, backend, callbacks=[on_update]).run(
         n_updates=10_000, until_s=budget_s)
+    sess.finish(cfg=exp, history=hist)    # --report-out/--trace-out etc.
     accs = [r.get("acc", 0.0) for r in hist]
     # "version" counts actual server-model updates; a zero-arrival window
     # emits a History row without moving the model

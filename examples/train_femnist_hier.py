@@ -34,6 +34,8 @@ def main():
     modes = fl.comparison_modes(args.strategy)
     n_selected = args.per_pon_selected * max(1, args.n_pons)
 
+    from repro import obs
+    sess = obs.session_from_args(args, driver="round_loop")
     from benchmarks import bench_accuracy
     res = bench_accuracy.run(n_rounds=args.rounds, n_selected=n_selected,
                              full=args.full, seed=args.seed, modes=modes,
@@ -42,6 +44,7 @@ def main():
                              p_crash=args.p_crash,
                              p_transient=args.p_transient,
                              strategy_kwargs=fl.strategy_kwargs_from_args(args))
+    sess.finish()      # merged metrics / trace / incidents across modes
     print("round," + ",".join(f"{m}_acc" for m in modes)
           + "," + ",".join(f"{m}_involved" for m in modes))
     for i in range(args.rounds):

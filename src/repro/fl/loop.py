@@ -161,6 +161,12 @@ def sync_round(cfg: ExperimentConfig, backend, failures,
             g.set(float(rt[key]))
             rec[key] = g.value
     rec.update(metrics)
+    if obs.health is not None:
+        # online health monitors (repro.obs.audit); incidents surface in
+        # the row only when fired, so disabled/healthy runs stay identical
+        new = obs.health.observe_round(rec, cfg=cfg, tracer=trc)
+        if new:
+            rec["incidents"] = len(new)
     return rec
 
 
@@ -217,8 +223,10 @@ class RoundLoop:
         self.failures = cfg.make_failure_model()
         self.history = History()
         # private registry (sweeps build many loops; run totals must not
-        # bleed across them) sharing the ambient tracer (one timeline)
-        self.obs = obs if obs is not None else Obs(tracer=_obs_get().tracer)
+        # bleed across them) sharing the ambient tracer (one timeline) and
+        # health engine; registered as a child so the session can export
+        # one merged metrics artifact for a whole sweep
+        self.obs = obs if obs is not None else _obs_get().child()
         self.rounds_consumed = 0    # rounds whose RNG draws have been used
         n = cfg.fl.n_clients
         if len(backend.sample_counts) < n or len(backend.onu_ids) < n:

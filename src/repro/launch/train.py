@@ -71,7 +71,8 @@ def main():
     args = ap.parse_args()
 
     logger = obs_logging.logger_from_args(args)
-    sess = obs.session_from_args(args)
+    sess = obs.session_from_args(
+        args, driver="orchestrator" if args.driver == "runtime" else "round_loop")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     exp = fl.experiment_config_from_args(args, n_rounds=args.steps)
@@ -118,16 +119,17 @@ def main():
             from repro import runtime
             orch = runtime.Orchestrator(exp, backend, callbacks=[on_round],
                                         obs=sess.obs)
-            orch.run(remaining, start_round=step0)
+            history = orch.run(remaining, start_round=step0)
         else:
             loop = fl.RoundLoop(exp, backend, callbacks=[on_round],
                                 obs=sess.obs)
-            loop.run(remaining, start_round=step0)
+            history = loop.run(remaining, start_round=step0)
         if args.ckpt:
             save_checkpoint(args.ckpt, args.steps,
                             (backend.params, backend.opt_state))
             logger.info("[ckpt] saved final at step %d", args.steps)
-        sess.finish()
+        # cfg/history feed the --report-out bundle (repro.obs.audit)
+        sess.finish(cfg=exp, history=history)
 
 
 if __name__ == "__main__":

@@ -37,16 +37,22 @@ from repro.obs.metrics import (SCHEMA, Counter, Gauge, Histogram,
 from repro.obs.tracer import NOOP_TRACER, NoopTracer, Span, Tracer
 from repro.obs import logging as obs_logging
 from repro.obs import profile
+from repro.obs import audit
 
 
 class ObsSession:
     """An Obs bundle plus its output destinations; ``finish()`` flushes."""
 
     def __init__(self, obs: Obs, trace_out: Optional[str] = None,
-                 metrics_out: Optional[str] = None, installed: bool = False):
+                 metrics_out: Optional[str] = None, installed: bool = False,
+                 incidents_out: Optional[str] = None,
+                 report_out: Optional[str] = None, driver: str = ""):
         self.obs = obs
         self.trace_out = trace_out
         self.metrics_out = metrics_out
+        self.incidents_out = incidents_out
+        self.report_out = report_out
+        self.driver = driver
         self._installed = installed
         self._prev = None
 
@@ -58,8 +64,14 @@ class ObsSession:
     def metrics(self) -> MetricsRegistry:
         return self.obs.metrics
 
-    def finish(self, quiet: bool = False) -> None:
-        """Write the configured artifacts and restore the prior context."""
+    def finish(self, quiet: bool = False, cfg=None, history=None) -> None:
+        """Write the configured artifacts and restore the prior context.
+
+        Drivers pass ``cfg``/``history`` so ``--report-out`` can bundle
+        the resolved config and the History rows (repro.obs.audit).
+        """
+        if self.obs.health is not None:
+            self.obs.health.finish(tracer=self.obs.tracer)
         if self.trace_out:
             self.obs.tracer.write(self.trace_out)
             if not quiet:
@@ -67,10 +79,26 @@ class ObsSession:
                       f"spans to {self.trace_out} "
                       "(open in https://ui.perfetto.dev)")
         if self.metrics_out:
-            self.obs.metrics.write_jsonl(self.metrics_out)
+            self.obs.merged_metrics().write_jsonl(self.metrics_out)
             if not quiet:
-                print(f"[obs] wrote {len(self.obs.metrics.records())} metrics "
-                      f"to {self.metrics_out}")
+                print(f"[obs] wrote merged metrics to {self.metrics_out}")
+        if self.incidents_out and self.obs.health is not None:
+            self.obs.health.write_jsonl(self.incidents_out)
+            if not quiet:
+                print(f"[obs] wrote {len(self.obs.health.incidents)} "
+                      f"incidents to {self.incidents_out}")
+        if self.report_out:
+            from repro.obs.audit import RunReport
+            rep = RunReport.from_run(
+                cfg=cfg, history=history, obs=self.obs,
+                incidents=(self.obs.health.records()
+                           if self.obs.health is not None else None),
+                driver=self.driver)
+            rep.write(self.report_out)
+            if not quiet:
+                print(f"[obs] wrote run bundle to {self.report_out} "
+                      f"(cfg={rep.config_hash or '?'}; diff two bundles "
+                      "with `python -m repro.obs.diff A B`)")
         if self._installed:
             install(self._prev)
             self._installed = False
@@ -78,19 +106,36 @@ class ObsSession:
 
 def session(trace_out: Optional[str] = None,
             metrics_out: Optional[str] = None,
-            do_install: bool = True) -> ObsSession:
-    """Build an ObsSession: a live tracer iff ``trace_out`` is set (the
-    no-op tracer otherwise), always a fresh registry; installed as the
-    ambient context by default so deep call sites see it."""
-    obs = Obs.enabled_tracing() if trace_out else Obs.disabled()
-    sess = ObsSession(obs, trace_out, metrics_out, installed=do_install)
+            do_install: bool = True,
+            incidents_out: Optional[str] = None,
+            report_out: Optional[str] = None,
+            health: bool = False, health_engine=None,
+            driver: str = "") -> ObsSession:
+    """Build an ObsSession: a live tracer iff ``trace_out`` or
+    ``report_out`` is set (bundles embed the trace so the diff engine can
+    align span timelines), the no-op tracer otherwise; always a fresh
+    registry; installed as the ambient context by default so deep call
+    sites see it. ``health``/``incidents_out`` attach a
+    :class:`repro.obs.audit.HealthEngine` (pass ``health_engine`` for a
+    pre-configured one, e.g. ``HealthEngine.from_args``)."""
+    obs = (Obs.enabled_tracing() if (trace_out or report_out)
+           else Obs.disabled())
+    if health_engine is None and (health or incidents_out):
+        from repro.obs.audit import HealthEngine
+        health_engine = HealthEngine()
+    obs.health = health_engine
+    sess = ObsSession(obs, trace_out, metrics_out, installed=do_install,
+                      incidents_out=incidents_out, report_out=report_out,
+                      driver=driver)
     if do_install:
         sess._prev = install(obs)
     return sess
 
 
 def add_obs_cli_args(ap) -> None:
-    """--trace-out/--metrics-out (one definition for every driver CLI)."""
+    """--trace-out/--metrics-out/--report-out + the --health/--slo-* block
+    (one definition for every driver CLI)."""
+    from repro.obs.audit.health import add_health_cli_args
     g = ap.add_argument_group("observability (repro.obs)")
     g.add_argument("--trace-out", default=None, metavar="TRACE.json",
                    help="write a Chrome/Perfetto trace of the run "
@@ -98,12 +143,24 @@ def add_obs_cli_args(ap) -> None:
                         "wall-clock compute lanes)")
     g.add_argument("--metrics-out", default=None, metavar="METRICS.jsonl",
                    help="write the run's MetricsRegistry as JSONL")
+    g.add_argument("--report-out", default=None, metavar="BUNDLE.json",
+                   help="write a RunReport bundle (config+hash, metrics, "
+                        "trace, incidents, env) — the input to "
+                        "`python -m repro.obs.diff`")
+    add_health_cli_args(g)
 
 
-def session_from_args(args) -> ObsSession:
+def session_from_args(args, driver: str = "") -> ObsSession:
     """The session selected by ``add_obs_cli_args`` flags, installed."""
+    health_engine = None
+    if getattr(args, "health", False) or getattr(args, "incidents_out", None):
+        from repro.obs.audit import HealthEngine
+        health_engine = HealthEngine.from_args(args)
     return session(trace_out=getattr(args, "trace_out", None),
-                   metrics_out=getattr(args, "metrics_out", None))
+                   metrics_out=getattr(args, "metrics_out", None),
+                   incidents_out=getattr(args, "incidents_out", None),
+                   report_out=getattr(args, "report_out", None),
+                   health_engine=health_engine, driver=driver)
 
 
 __all__ = [
@@ -113,4 +170,5 @@ __all__ = [
     "read_jsonl",
     "NOOP_TRACER", "NoopTracer", "Span", "Tracer",
     "obs_logging", "profile",
+    "audit",
 ]

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Iterator, Optional, Union
+from typing import Any, Iterator, List, Optional, Union
 
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.tracer import NOOP_TRACER, NoopTracer, Tracer
@@ -29,10 +29,16 @@ from repro.obs.tracer import NOOP_TRACER, NoopTracer, Tracer
 
 @dataclasses.dataclass
 class Obs:
-    """One observability bundle: a tracer + a metrics registry."""
+    """One observability bundle: tracer + metrics registry (+ optional
+    health engine, ``repro.obs.audit`` — None unless ``--health``)."""
 
     tracer: Union[Tracer, NoopTracer] = NOOP_TRACER
     metrics: MetricsRegistry = dataclasses.field(default_factory=MetricsRegistry)
+    health: Optional[Any] = None    # audit.HealthEngine (avoids the import)
+    # registries of child bundles handed to driver instances — kept so a
+    # session can export ONE merged metrics artifact for a whole sweep
+    _children: List[MetricsRegistry] = dataclasses.field(
+        default_factory=list, repr=False)
 
     @classmethod
     def enabled_tracing(cls) -> "Obs":
@@ -42,6 +48,24 @@ class Obs:
     @classmethod
     def disabled(cls) -> "Obs":
         return cls()
+
+    def child(self) -> "Obs":
+        """A driver-private bundle: same tracer (one timeline) and health
+        engine, fresh registry (run totals must not bleed across the many
+        driver instances a sweep creates). The child registry is
+        remembered so :meth:`merged_metrics` can fold the whole sweep
+        into one artifact."""
+        c = Obs(tracer=self.tracer, health=self.health)
+        self._children.append(c.metrics)
+        return c
+
+    def merged_metrics(self) -> MetricsRegistry:
+        """This bundle's registry plus every child's, merged fresh."""
+        out = MetricsRegistry()
+        out.merge(self.metrics)
+        for child in self._children:
+            out.merge(child)
+        return out
 
 
 _DEFAULT = Obs()

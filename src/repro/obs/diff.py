@@ -1,0 +1,11 @@
+"""``python -m repro.obs.diff A B [--html REPORT.html]`` — compare two
+``--report-out`` run bundles. Thin entry point over
+:func:`repro.obs.audit.diff.main`; exits nonzero when hard diffs exist."""
+from __future__ import annotations
+
+import sys
+
+from repro.obs.audit.diff import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,15 +18,24 @@ tests/test_obs.py against the legacy ``*_mbits`` History values).
 
 Histograms keep exact count/sum/min/max plus a bounded sample reservoir —
 distribution summaries (straggler/staleness spread, DBA queue depth,
-kernel step times) without unbounded memory on long runs.
+kernel step times) without unbounded memory on long runs. The reservoir
+is a *seeded* Algorithm-R sample: every observation — early or late — has
+the same retention probability, and the seed derives from the metric name
+so two identical runs export identical quantiles (the determinism pin in
+tests/test_obs.py). The previous stride-doubling scheme kept a geometric
+bias toward early samples on long runs.
 
 Exporters: ``summary()`` (flat dict, attached to benchmark rows) and
 ``write_jsonl()`` (one JSON object per metric, machine-diffable across
-PRs).
+PRs). Registries from separate driver instances merge via
+:meth:`MetricsRegistry.merge` (the ``benchmarks/run.py --metrics-out``
+sweep artifact).
 """
 from __future__ import annotations
 
 import json
+import random
+import zlib
 from typing import Any, Dict, List, Optional
 
 # every metrics artifact this repo emits carries this schema tag so
@@ -59,6 +68,11 @@ class Counter:
     def peek(self) -> float:
         return self._window
 
+    def merge_from(self, other: "Counter") -> None:
+        self.total += other.total
+        self._window += other._window
+        self.n += other.n
+
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": "counter", "name": self.name, "total": self.total,
                 "n": self.n}
@@ -83,6 +97,13 @@ class Gauge:
         self.max = v if v > self.max else self.max
         self.n += 1
 
+    def merge_from(self, other: "Gauge") -> None:
+        if other.n:
+            self.value = other.value       # later-merged registry wins
+            self.min = min(self.min, other.min)
+            self.max = max(self.max, other.max)
+        self.n += other.n
+
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": "gauge", "name": self.name, "value": self.value,
                 "min": self.min if self.n else None,
@@ -90,27 +111,30 @@ class Gauge:
 
 
 class Histogram:
-    """Exact moments + a bounded deterministic sample reservoir.
+    """Exact moments + a bounded seeded-reservoir sample (Algorithm R).
 
-    The reservoir keeps the first ``max_samples`` observations and then
-    every k-th (k doubling), so quantiles stay representative on long
-    runs without the O(n) memory of keeping everything. Deterministic —
-    no RNG — so two identical runs export identical summaries.
+    ``count``/``sum``/``min``/``max`` are exact over every observation.
+    The quantile reservoir holds a uniform sample of at most
+    ``max_samples`` observations: once full, the i-th observation replaces
+    a random slot with probability ``max_samples / i`` — so late
+    observations are just as likely to be retained as early ones (the old
+    stride-thinning scheme silently discarded the tail of long runs,
+    biasing quantiles toward warm-up values). The RNG is seeded from the
+    metric name, so identical runs export identical summaries bit for bit.
     """
 
     __slots__ = ("name", "count", "sum", "min", "max", "samples",
-                 "_stride", "_max", "_i")
+                 "_max", "_rng")
 
-    def __init__(self, name: str, max_samples: int = 4096):
+    def __init__(self, name: str, max_samples: int = 4096, seed: int = 0):
         self.name = name
         self.count = 0
         self.sum = 0.0
         self.min = float("inf")
         self.max = float("-inf")
         self.samples: List[float] = []
-        self._stride = 1
         self._max = max_samples
-        self._i = 0
+        self._rng = random.Random(zlib.crc32(name.encode()) ^ seed)
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -118,13 +142,13 @@ class Histogram:
         self.sum += v
         self.min = v if v < self.min else self.min
         self.max = v if v > self.max else self.max
-        if self._i % self._stride == 0:
-            if len(self.samples) >= self._max:
-                # thin: keep every other retained sample, double the stride
-                self.samples = self.samples[::2]
-                self._stride *= 2
+        if len(self.samples) < self._max:
             self.samples.append(v)
-        self._i += 1
+        else:
+            # Algorithm R: uniform over all `count` observations so far
+            j = self._rng.randrange(self.count)
+            if j < self._max:
+                self.samples[j] = v
 
     @property
     def mean(self) -> float:
@@ -136,6 +160,18 @@ class Histogram:
         s = sorted(self.samples)
         idx = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
         return s[idx]
+
+    def merge_from(self, other: "Histogram") -> None:
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        merged = self.samples + other.samples
+        if len(merged) > self._max:
+            # deterministic even-stride thinning of the combined reservoir
+            step = -(-len(merged) // self._max)       # ceil division
+            merged = merged[::step][:self._max]
+        self.samples = merged
 
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": "histogram", "name": self.name, "count": self.count,
@@ -176,6 +212,19 @@ class MetricsRegistry:
 
     def names(self) -> List[str]:
         return sorted([*self._counters, *self._gauges, *self._hists])
+
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Fold ``other``'s instruments into this registry (same-name
+        counters/histograms accumulate; gauges take the merged value).
+        The ``benchmarks/run.py`` sweep artifact: one registry per driver
+        instance, merged into the session registry at export time."""
+        for name, c in other._counters.items():
+            self.counter(name).merge_from(c)
+        for name, g in other._gauges.items():
+            self.gauge(name).merge_from(g)
+        for name, h in other._hists.items():
+            self.histogram(name).merge_from(h)
+        return self
 
     # --- exporters -------------------------------------------------------
 

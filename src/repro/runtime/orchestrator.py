@@ -103,8 +103,10 @@ class Orchestrator:
         self.backend = backend
         self.callbacks: List[Callback] = list(callbacks)
         # private registry (sweeps build many orchestrators; run totals must
-        # not bleed) sharing the ambient tracer — one simulated timeline
-        self.obs = obs if obs is not None else Obs(tracer=_obs_get().tracer)
+        # not bleed) sharing the ambient tracer — one simulated timeline —
+        # and health engine; registered as a child so a session can export
+        # one merged metrics artifact for a whole sweep
+        self.obs = obs if obs is not None else _obs_get().child()
         self.policy: AggregationPolicy = make_policy(
             policy if policy is not None else cfg.policy)
         self.rng = np.random.default_rng(cfg.seed)
@@ -424,5 +426,12 @@ class Orchestrator:
             rec["metro_mbits"] = self.take_metro_mbits()
         rec.update(metrics)
         rec.update(extra or {})
+        if self.obs.health is not None:
+            # online health monitors (repro.obs.audit); the key appears
+            # only when incidents fired, so healthy runs stay identical
+            new = self.obs.health.observe_round(rec, cfg=self.cfg,
+                                                tracer=self.obs.tracer)
+            if new:
+                rec["incidents"] = len(new)
         self.emit(rec)
         return rec

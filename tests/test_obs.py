@@ -16,6 +16,8 @@ from repro.pon import PonConfig
 from repro.pon.dba import make_dba
 from repro.pon.events import Topology, UpstreamJob, UpstreamSim
 
+from hypothesis_compat import given, settings, st
+
 
 # ------------------------------------------------------------------ tracer
 
@@ -128,6 +130,81 @@ def test_counter_take_is_bit_for_bit_with_legacy_accumulator():
     assert c.peek() == 3.0 and c.take() == 3.0 and c.peek() == 0.0
 
 
+@settings(max_examples=40)
+@given(adds=st.lists(st.tuples(st.floats(min_value=0.0, max_value=1e4),
+                               st.booleans()),
+                     min_size=0, max_size=60))
+def test_counter_total_equals_sum_of_drained_windows(adds):
+    """Property: under ANY interleaving of add() and take(), the monotonic
+    total equals the sum of every drained window plus whatever is still
+    pending — the invariant that makes History rows (windows) and run
+    totals two readouts of one accumulator."""
+    c = Counter("prop")
+    windows = []
+    n_adds = 0
+    for v, do_take in adds:
+        c.add(v)
+        n_adds += 1
+        if do_take:
+            w = c.take()
+            assert w >= 0.0
+            windows.append(w)
+    windows.append(c.take())         # final drain picks up the remainder
+    # equality up to float associativity: the windows are partial sums of
+    # the same add sequence, re-summed in grouped order
+    assert math.isclose(c.total, math.fsum(windows),
+                        rel_tol=1e-12, abs_tol=1e-9)
+    assert c.n == n_adds
+    assert c.peek() == 0.0 and c.take() == 0.0
+    # the bit-for-bit case the drivers rely on: draining after EVERY add
+    # returns each added float exactly (0.0 + v == v)
+    c2 = Counter("prop-exact")
+    for v, _ in adds:
+        c2.add(v)
+        assert c2.take() == v
+
+
+def test_histogram_reservoir_is_deterministic_and_unbiased():
+    """Satellite: the seeded reservoir keeps exact count/sum, can retain
+    late observations (the old stride scheme silently dropped the tail),
+    and two identical observation sequences export identical samples."""
+    h1 = Histogram("pin", max_samples=32)
+    h2 = Histogram("pin", max_samples=32)
+    vals = [float(v) for v in range(500)]
+    for v in vals:
+        h1.observe(v)
+        h2.observe(v)
+    # exact moments over EVERY observation, not just the reservoir
+    assert h1.count == 500 and h1.sum == sum(vals)
+    assert (h1.min, h1.max) == (0.0, 499.0)
+    # determinism: same name + same sequence -> identical reservoir,
+    # hence identical exported quantiles, bit for bit
+    assert h1.samples == h2.samples
+    assert h1.to_dict() == h2.to_dict()
+    # unbiased: observations past max_samples must be reachable (Algorithm
+    # R replaces uniformly; 468 tail values vs 32 slots makes retention of
+    # at least one tail value overwhelmingly likely for any fixed seed)
+    assert any(v >= 32 for v in h1.samples)
+    # a different metric name seeds a different (still valid) reservoir
+    h3 = Histogram("other", max_samples=32)
+    for v in vals:
+        h3.observe(v)
+    assert h3.count == h1.count and h3.sum == h1.sum
+
+
+def test_histogram_merge_preserves_exact_moments():
+    a = Histogram("m", max_samples=16)
+    b = Histogram("m", max_samples=16)
+    for v in range(40):
+        a.observe(float(v))
+    for v in range(40, 100):
+        b.observe(float(v))
+    a.merge_from(b)
+    assert a.count == 100 and a.sum == sum(range(100))
+    assert (a.min, a.max) == (0.0, 99.0)
+    assert len(a.samples) <= 16
+
+
 def test_gauge_and_histogram_summaries():
     g = Gauge("g")
     for v in (3.0, 1.0, 2.0):
@@ -214,6 +291,41 @@ def test_tracing_changes_no_history_values(mode, n_pons):
     enabled = Obs.enabled_tracing()
     with obs.use(enabled):
         _, traced = _transport_loop(mode, n_pons=n_pons)
+    assert len(enabled.tracer.spans) > 0       # it really did trace
+    assert len(base) == len(traced)
+    for a, b in zip(base, traced):
+        assert set(a) == set(b)                # no extra History keys
+        for k in a:
+            va, vb = a[k], b[k]
+            if isinstance(va, float) and math.isnan(va):
+                assert math.isnan(vb)
+            else:
+                assert va == vb, (k, va, vb)
+
+
+def _transport_orchestrator(policy: str, rounds: int = 4):
+    from repro import runtime
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=8, pon=pon)
+    counts = np.random.default_rng(0).integers(
+        50, 400, flc.n_clients).astype(np.float32)
+    onu = np.arange(flc.n_clients) // flc.clients_per_onu
+    backend = fl.TransportBackend(fl.make_strategy("sfl"), counts, onu)
+    exp = fl.ExperimentConfig(fl=flc, strategy="sfl_two_step",
+                              n_rounds=rounds, seed=3, policy=policy)
+    orch = runtime.Orchestrator(exp, backend)
+    return orch, orch.run()
+
+
+@pytest.mark.parametrize("policy", ["semi_sync", "fedbuff"])
+def test_tracing_changes_no_history_values_async_policies(policy):
+    """PR 6 pinned traced-vs-untraced equality on the sync paths only;
+    the async Orchestrator policies get the identical guarantee: an
+    enabled tracer is a pure observer of semi_sync/fedbuff rows too."""
+    _, base = _transport_orchestrator(policy)
+    enabled = Obs.enabled_tracing()
+    with obs.use(enabled):
+        _, traced = _transport_orchestrator(policy)
     assert len(enabled.tracer.spans) > 0       # it really did trace
     assert len(base) == len(traced)
     for a, b in zip(base, traced):
