@@ -60,14 +60,18 @@ def _segment_row(rt, mode: str, model_mbits: float) -> dict:
 def run_transport(rounds: int = 6, seed: int = 0, per_pon_selected: int = 16,
                   n_onus: int = 8, clients_per_onu: int = 10,
                   pons_list: Sequence[int] = N_PONS,
-                  modes: Sequence[str] = MODES):
+                  modes: Sequence[str] = MODES, sim_engine: str = "event"):
     """Transport-only sweep (paired draws across modes, like bench_dba)."""
     rows = []
     for n_pons in pons_list:
         pon = PonConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
-                        n_pons=n_pons)
+                        n_pons=n_pons, sim_engine=sim_engine)
+        # clamp the sweep point to the configured population (the paper's
+        # N grows with the forest; small --onus setups would over-select)
+        population = n_onus * clients_per_onu * n_pons
         flc = FLConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
-                       n_pons=n_pons, n_selected=per_pon_selected * n_pons,
+                       n_pons=n_pons,
+                       n_selected=min(per_pon_selected * n_pons, population),
                        pon=pon)
         counts = np.random.default_rng(seed).integers(
             50, 400, flc.n_clients).astype(np.float32)
@@ -106,7 +110,7 @@ def run_transport(rounds: int = 6, seed: int = 0, per_pon_selected: int = 16,
 def run_tta(rounds: int = 6, seed: int = 0, target_acc: float = 0.10,
             per_pon_selected: int = 4, n_onus: int = 2,
             clients_per_onu: int = 4, pons_list: Sequence[int] = (1, 2, 4),
-            modes: Sequence[str] = MODES):
+            modes: Sequence[str] = MODES, sim_engine: str = "event"):
     """Learning sweep: sync rounds on the reduced CNN per (n_pons, mode);
     time-to-accuracy in simulated seconds (rounds × the PON deadline)."""
     import jax
@@ -120,9 +124,12 @@ def run_tta(rounds: int = 6, seed: int = 0, target_acc: float = 0.10,
     rows = []
     for n_pons in pons_list:
         pon = PonConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
-                        n_pons=n_pons)
+                        n_pons=n_pons, sim_engine=sim_engine)
+        # same clamp as run_transport: never select beyond the population
+        population = n_onus * clients_per_onu * n_pons
         flc = FLConfig(n_onus=n_onus, clients_per_onu=clients_per_onu,
-                       n_pons=n_pons, n_selected=per_pon_selected * n_pons,
+                       n_pons=n_pons,
+                       n_selected=min(per_pon_selected * n_pons, population),
                        local_steps=8, local_lr=0.06, pon=pon)
         clients, eval_set = femnist.generate(
             femnist.FemnistConfig(n_clients=flc.n_clients, seed=seed + 7))
@@ -167,6 +174,10 @@ def main(argv=None):
     ap.add_argument("--onus", type=int, default=8)
     ap.add_argument("--clients-per-onu", type=int, default=10)
     ap.add_argument("--pons", type=int, nargs="+", default=list(N_PONS))
+    ap.add_argument("--sim-engine", default="event",
+                    choices=("event", "fast", "hybrid"),
+                    help="upstream simulator engine (repro.pon.fast); "
+                         "'fast' makes 1e6-client sweeps take seconds")
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="write rows as {'hierarchy': [...]} JSON")
     args = ap.parse_args(argv)
@@ -177,7 +188,8 @@ def main(argv=None):
                          per_pon_selected=args.per_pon_selected,
                          n_onus=args.onus,
                          clients_per_onu=args.clients_per_onu,
-                         pons_list=tuple(args.pons))
+                         pons_list=tuple(args.pons),
+                         sim_engine=args.sim_engine)
     rows = report.emit_rows(
         rows, "hierarchy",
         [("n_pons", ""), ("mode", ""), ("n_selected", ""),
@@ -206,7 +218,8 @@ def main(argv=None):
     if args.tta_rounds > 0:
         tta = report.emit_rows(
             run_tta(rounds=args.tta_rounds, seed=args.seed,
-                    target_acc=args.target_acc),
+                    target_acc=args.target_acc,
+                    sim_engine=args.sim_engine),
             "hierarchy",
             [("n_pons", ""), ("mode", ""), ("t_to_target_s", ".0f"),
              ("final_acc", ".3f"), ("involved_mean", ".1f")])

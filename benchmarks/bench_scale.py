@@ -1,0 +1,215 @@
+"""Population-scale engine sweep: sim wall-time vs ONU count per engine.
+
+The claim being measured (DESIGN.md §15): the array-native ``fast``
+engine (``repro.pon.fast``) makes one simulated round over 10⁶ clients
+(10³ PONs × 10³ ONUs) a sub-second operation, while staying *bit-exact*
+against the event-driven reference for load-independent DBAs — so the
+paper's per-segment scaling claims can be demonstrated at population
+scale instead of toy forests. Each row is one (engine, mode, N) cell:
+host wall seconds for the transport stage plus the deterministic
+per-segment accounting (``pon_mbits_max`` / ``metro_mbits`` /
+``trunk_mbits``).
+
+Built-in asserts (the CI scale-smoke gate):
+
+  * cross-engine parity — where both engines ran the same (mode, N)
+    cell, every accounting column must match exactly;
+  * trunk flatness — ``hier_sfl`` trunk Mbits/round must stay flat
+    across the whole N sweep (the paper's headline, now at 10⁵⁺);
+  * ``--assert-wall-s B`` — every fast-engine cell must simulate in
+    ≤ B host seconds.
+
+The event engine is capped at ``--event-cap`` clients (default 10⁴) so
+the default sweep finishes in seconds; capped cells are logged, never
+silently dropped.
+
+    PYTHONPATH=src python -m benchmarks.bench_scale --sim-engine fast \
+        --assert-wall-s 10 --json scale.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro import fl
+from repro.core.fedavg import FLConfig, onu_of_client
+from repro.pon import PonConfig
+
+from benchmarks.bench_hierarchy import _mk, _segment_row
+
+MODES: Sequence[str] = ("classical", "sfl", "hier_sfl")
+ENGINES: Sequence[str] = ("fast", "event")
+N_CLIENTS: Sequence[int] = (1000, 10000, 100000)
+
+# deterministic accounting columns every engine must agree on exactly
+_ACCOUNTING = ("involved", "upstream_mbits", "pon_mbits_max",
+               "metro_mbits", "metro_mbits_max", "trunk_mbits")
+
+
+def _topology(n_clients: int, onus_per_pon: int, clients_per_onu: int):
+    """Forest shape for a population: fill PONs of ``onus_per_pon`` ONUs."""
+    per_pon = onus_per_pon * clients_per_onu
+    n_pons = max(1, -(-n_clients // per_pon))       # ceil division
+    return n_pons, onus_per_pon, clients_per_onu
+
+
+def run(n_clients_list: Sequence[int] = N_CLIENTS,
+        engines: Sequence[str] = ENGINES, modes: Sequence[str] = MODES,
+        onus_per_pon: int = 1000, clients_per_onu: int = 1,
+        rounds: int = 1, seed: int = 0, bg_load: float = 0.0,
+        event_cap: int = 10000):
+    rows = []
+    for n_clients in n_clients_list:
+        n_pons, n_onus, cpo = _topology(n_clients, onus_per_pon,
+                                        clients_per_onu)
+        population = n_pons * n_onus * cpo
+        counts = np.random.default_rng(seed).integers(
+            50, 400, population).astype(np.float32)
+        for mode in modes:
+            canon = fl.canonical_name(mode)
+            for engine in engines:
+                if engine == "event" and n_clients > event_cap:
+                    # no silent caps: the skipped cell is announced
+                    print(f"[cap] event engine capped at N<={event_cap}; "
+                          f"skipping N={n_clients} {canon}")
+                    continue
+                pon = PonConfig(n_onus=n_onus, clients_per_onu=cpo,
+                                n_pons=n_pons, background_load=bg_load,
+                                sim_engine=engine)
+                flc = FLConfig(n_onus=n_onus, clients_per_onu=cpo,
+                               n_pons=n_pons,
+                               n_selected=min(n_clients, population),
+                               pon=pon)
+                backend = fl.TransportBackend(_mk(mode, n_pons), counts,
+                                              onu_of_client(flc))
+                acc = {k: [] for k in _ACCOUNTING}
+                wall = 0.0
+                for r in range(rounds):
+                    exp = fl.ExperimentConfig(
+                        fl=flc, strategy=canon,
+                        strategy_kwargs=tuple(sorted(
+                            fl.filter_strategy_kwargs(
+                                mode, {"n_pons": n_pons}).items())),
+                        n_rounds=1, seed=seed + 1000 * r)
+                    t0 = time.perf_counter()
+                    sel, mask, rt = fl.loop._transport_stage(
+                        exp, backend, None,
+                        np.random.default_rng(exp.seed), 0)
+                    wall += time.perf_counter() - t0
+                    seg = _segment_row(rt, mode, pon.model_mbits)
+                    acc["involved"].append(float(mask.sum()))
+                    acc["upstream_mbits"].append(
+                        float(rt["upstream_mbits"]))
+                    for k, v in seg.items():
+                        acc[k].append(float(v))
+                rows.append({
+                    "engine": engine, "mode": canon,
+                    "n_clients": n_clients, "n_pons": n_pons,
+                    "n_selected": flc.n_selected,
+                    "wall_s": wall / rounds,
+                    **{k: float(np.mean(acc[k])) for k in _ACCOUNTING},
+                })
+    return rows
+
+
+def check_parity(rows) -> int:
+    """Cells simulated by >1 engine must agree exactly on accounting."""
+    by_cell = {}
+    for r in rows:
+        by_cell.setdefault((r["mode"], r["n_clients"]), []).append(r)
+    n_pairs = 0
+    for cell, group in sorted(by_cell.items()):
+        for other in group[1:]:
+            n_pairs += 1
+            for k in _ACCOUNTING:
+                if group[0][k] != other[k]:
+                    raise AssertionError(
+                        f"engine parity violated at {cell}: {k} "
+                        f"{group[0]['engine']}={group[0][k]!r} vs "
+                        f"{other['engine']}={other[k]!r}")
+    return n_pairs
+
+
+def check_trunk_flat(rows, rtol: float = 1e-6) -> None:
+    """hier_sfl trunk Mbits/round must not grow with the population."""
+    for engine in sorted({r["engine"] for r in rows}):
+        trunk = [(r["n_clients"], r["trunk_mbits"]) for r in rows
+                 if r["engine"] == engine and r["mode"] == "hier_sfl"]
+        if len(trunk) < 2:
+            continue
+        vals = [t for _, t in trunk]
+        lo, hi = min(vals), max(vals)
+        if hi - lo > rtol * max(hi, 1e-12):
+            raise AssertionError(
+                f"hier_sfl trunk not flat under {engine}: {trunk}")
+        ns = [n for n, _ in trunk]
+        print(f"# trunk flat ({engine}): {min(ns)}→{max(ns)} clients at "
+              f"{hi:.1f} Mbits/round")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-clients", type=int, nargs="+",
+                    default=list(N_CLIENTS),
+                    help="population sweep points")
+    ap.add_argument("--engines", nargs="+", default=list(ENGINES),
+                    choices=("event", "fast", "hybrid"))
+    ap.add_argument("--sim-engine", default=None,
+                    choices=("event", "fast", "hybrid"),
+                    help="single-engine shorthand (overrides --engines)")
+    ap.add_argument("--modes", nargs="+", default=list(MODES))
+    ap.add_argument("--onus-per-pon", type=int, default=1000)
+    ap.add_argument("--clients-per-onu", type=int, default=1)
+    ap.add_argument("--rounds", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bg-load", type=float, default=0.0)
+    ap.add_argument("--event-cap", type=int, default=10000,
+                    help="largest N simulated by the event engine "
+                         "(capped cells are logged)")
+    ap.add_argument("--assert-wall-s", type=float, default=None,
+                    help="fail if any fast-engine cell takes longer")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write rows as {'scale': [...]} JSON")
+    args = ap.parse_args(argv)
+    engines = [args.sim_engine] if args.sim_engine else args.engines
+
+    from benchmarks import report
+
+    rows = run(n_clients_list=tuple(args.n_clients), engines=tuple(engines),
+               modes=tuple(args.modes), onus_per_pon=args.onus_per_pon,
+               clients_per_onu=args.clients_per_onu, rounds=args.rounds,
+               seed=args.seed, bg_load=args.bg_load,
+               event_cap=args.event_cap)
+    rows = report.emit_rows(
+        rows, "scale",
+        [("engine", ""), ("mode", ""), ("n_clients", ""), ("n_pons", ""),
+         ("involved", ".0f"), ("pon_mbits_max", ".0f"),
+         ("metro_mbits_max", ".0f"), ("trunk_mbits", ".0f"),
+         ("wall_s", ".3f")],
+        header=f"bench_scale ({args.onus_per_pon} ONUs/PON × "
+               f"{args.clients_per_onu} clients/ONU, {args.rounds} "
+               f"round(s)/cell)", json_out=args.json)
+
+    n_pairs = check_parity(rows)
+    if n_pairs:
+        print(f"# engine parity: {n_pairs} shared cells match exactly")
+    check_trunk_flat(rows)
+    if args.assert_wall_s is not None:
+        worst = max((r for r in rows if r["engine"] != "event"),
+                    key=lambda r: r["wall_s"], default=None)
+        if worst is not None and worst["wall_s"] > args.assert_wall_s:
+            raise SystemExit(
+                f"wall-time budget exceeded: {worst['engine']} "
+                f"{worst['mode']} N={worst['n_clients']} took "
+                f"{worst['wall_s']:.2f}s > {args.assert_wall_s}s")
+        if worst is not None:
+            print(f"# wall budget ok: slowest non-event cell "
+                  f"{worst['wall_s']:.3f}s <= {args.assert_wall_s}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

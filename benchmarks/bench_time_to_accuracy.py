@@ -56,8 +56,12 @@ def run(rounds: int = 6, sim_s: float = None, target_acc: float = 0.10,
     cfg = configs.get("femnist_cnn").reduced()
     if pon is None:
         pon = PonConfig()
+    # clamp selection to the configured population (mirrors bench_upstream:
+    # small --onus topologies would otherwise select beyond the client set)
+    population = pon.n_onus * pon.clients_per_onu * pon.n_pons
     flc = FLConfig(n_onus=pon.n_onus, clients_per_onu=pon.clients_per_onu,
-                   n_pons=pon.n_pons, n_selected=n_selected, local_steps=8,
+                   n_pons=pon.n_pons,
+                   n_selected=min(n_selected, population), local_steps=8,
                    local_lr=0.06, pon=pon)
     window = window_s if window_s is not None else pon.sync_threshold_s
     budget_s = sim_s if sim_s is not None else rounds * window

@@ -41,6 +41,7 @@ ALIGN_KEYS: Dict[str, Tuple[str, ...]] = {
     "accuracy": ("round",),
     "time_to_accuracy": ("policy", "mode"),
     "kernels": ("name",),
+    "scale": ("engine", "mode", "n_clients"),
 }
 
 _SKIP_FIELDS = {"bench", "bench_schema", "obs_schema"}

@@ -8,6 +8,8 @@
   dba       — DBA policy × wavelengths × background-load sweep (beyond-paper)
   hierarchy — multi-PON forest: per-segment Mbits vs n_pons ×
               {hier_sfl, sfl, classical} (beyond-paper, DESIGN.md §12)
+  scale     — population-scale engine sweep: sim wall-time vs ONU count,
+              fast vs event engine parity + trunk flatness (DESIGN.md §15)
   time_to_accuracy — simulated-seconds-to-target, sync vs semi_sync vs
               fedbuff through the repro.runtime Orchestrator (beyond-paper)
   kernels   — ONU-AF / quantize micro-bench
@@ -28,7 +30,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="upstream|involved|accuracy|dba|hierarchy|"
+                    help="upstream|involved|accuracy|dba|hierarchy|scale|"
                          "time_to_accuracy|kernels|report")
     ap.add_argument("--full", action="store_true",
                     help="accuracy bench with the full LEAF CNN (slow)")
@@ -50,7 +52,7 @@ def main() -> None:
                        metrics_out=args.metrics_out, driver="bench_sweep")
 
     from benchmarks import (bench_accuracy, bench_dba, bench_hierarchy,
-                            bench_involved, bench_kernels,
+                            bench_involved, bench_kernels, bench_scale,
                             bench_time_to_accuracy, bench_upstream, report)
 
     acc_argv = []
@@ -62,12 +64,16 @@ def main() -> None:
         hier_argv += ["--rounds", str(args.rounds)]
     if args.full:
         acc_argv += ["--full"]
+    # fast-engine only: the sweep reaches 1e5 clients, and the same argv
+    # is used by the CI scale-smoke step so BENCH_*.json rows always align
+    scale_argv = ["--sim-engine", "fast"]
 
     benches = {
         "upstream": lambda: bench_upstream.main([]),
         "involved": lambda: bench_involved.main([]),
         "dba": lambda: bench_dba.main([]),
         "hierarchy": lambda: bench_hierarchy.main(hier_argv),
+        "scale": lambda: bench_scale.main(scale_argv),
         "kernels": bench_kernels.main,
         "accuracy": lambda: bench_accuracy.main(acc_argv),
         "time_to_accuracy": lambda: bench_time_to_accuracy.main(tta_argv),

@@ -147,6 +147,7 @@ def sync_round(cfg: ExperimentConfig, backend, failures,
     metrics = backend.run_round(rnd, sel, mask, rt, rng)
     reg = obs.metrics
     rec = {"round": rnd, "n_selected": len(sel),
+           "sim_engine": rt.get("sim_engine", "event"),
            "involved": float(mask.sum())}
     reg.histogram("fl.involved").observe(rec["involved"])
     # per-segment accounting from the transport (DESIGN.md §12)
@@ -227,6 +228,12 @@ class RoundLoop:
         # health engine; registered as a child so the session can export
         # one merged metrics artifact for a whole sweep
         self.obs = obs if obs is not None else _obs_get().child()
+        # run-level label on every exported metrics record: which upstream
+        # engine produced these numbers (repro.obs.diff keys on it to
+        # localize engine-choice divergences between run bundles)
+        self.obs.metrics.tag("sim_engine",
+                             getattr(cfg.fl.pon_config(), "sim_engine",
+                                     "event"))
         self.rounds_consumed = 0    # rounds whose RNG draws have been used
         n = cfg.fl.n_clients
         if len(backend.sample_counts) < n or len(backend.onu_ids) < n:

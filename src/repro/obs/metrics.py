@@ -189,6 +189,20 @@ class MetricsRegistry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, Histogram] = {}
+        self._tags: Dict[str, Any] = {}
+
+    # --- run-level tags --------------------------------------------------
+
+    def tag(self, key: str, value: Any) -> None:
+        """Attach a run-level label (e.g. ``sim_engine``) stamped onto every
+        exported record. Tags annotate ``records()``/``write_jsonl`` rows
+        only — ``summary()`` stays a pure {metric: value} dict so benchmark
+        row schemas are unchanged by tagging."""
+        self._tags[str(key)] = value
+
+    @property
+    def tags(self) -> Dict[str, Any]:
+        return dict(self._tags)
 
     # --- instruments -----------------------------------------------------
 
@@ -224,6 +238,7 @@ class MetricsRegistry:
             self.gauge(name).merge_from(g)
         for name, h in other._hists.items():
             self.histogram(name).merge_from(h)
+        self._tags.update(other._tags)     # union; later-merged wins
         return self
 
     # --- exporters -------------------------------------------------------
@@ -249,6 +264,7 @@ class MetricsRegistry:
         rows += [i.to_dict() for _, i in sorted(self._hists.items())]
         for r in rows:
             r["obs_schema"] = SCHEMA
+            r.update(self._tags)
         return rows
 
     def write_jsonl(self, path: str) -> str:

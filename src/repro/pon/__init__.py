@@ -26,6 +26,13 @@ from repro.pon.metro import (
     expected_segment_mbits,
     simulate_hier_round,
 )
+from repro.pon.fast import (
+    SIM_ENGINES,
+    FluidUpstreamSim,
+    orchestrator_engine,
+    simulate_hier_round_fast,
+    simulate_round_fast,
+)
 
 __all__ = [
     "PonConfig", "add_pon_cli_args", "pon_config_from_args",
@@ -37,4 +44,6 @@ __all__ = [
     "BackgroundTraffic",
     "UpstreamJob", "simulate_round", "simulate_upstream",
     "MetroTopology", "expected_segment_mbits", "simulate_hier_round",
+    "SIM_ENGINES", "FluidUpstreamSim", "orchestrator_engine",
+    "simulate_hier_round_fast", "simulate_round_fast",
 ]

@@ -298,6 +298,22 @@ def simulate_round(cfg: PonConfig, rng: np.random.Generator,
     segment — so ``mode='hier'`` degenerates exactly to the flat ``sfl``
     path (the bit-for-bit pin in tests/test_hier.py).
     """
+    engine = getattr(cfg, "sim_engine", "event")
+    if engine != "event":
+        from repro.pon import fast
+        if engine not in fast.SIM_ENGINES:
+            raise ValueError(f"unknown sim_engine {engine!r}; "
+                             f"expected one of {fast.SIM_ENGINES}")
+        if topology is not None or dba is not None or traffic is not None:
+            raise ValueError(
+                "the fast/hybrid engines build topology/DBA/traffic from "
+                "cfg — explicit overrides require sim_engine='event'")
+        if cfg.n_pons > 1:
+            return fast.simulate_hier_round_fast(cfg, rng, selected,
+                                                 onu_ids, sample_counts,
+                                                 mode, obs=obs)
+        return fast.simulate_round_fast(cfg, rng, selected, onu_ids,
+                                        sample_counts, mode, obs=obs)
     if cfg.n_pons > 1:
         if topology is not None or dba is not None or traffic is not None:
             raise ValueError(
@@ -412,4 +428,5 @@ def simulate_round(cfg: PonConfig, rng: np.random.Generator,
                                if math.isfinite(j.start_s))),
         "bg_mbits_offered": float(sum(j.size_mbits for j in bg_jobs)),
         "bg_mbits_served": float(sum(j.size_mbits for j in bg_done)),
+        "sim_engine": "event",
     }

@@ -210,6 +210,12 @@ def simulate_hier_round(cfg: PonConfig, rng: np.random.Generator,
     trc = obs.tracer if getattr(obs.tracer, "enabled", False) else None
     met = obs.metrics
 
+    if metro is None and getattr(cfg, "sim_engine", "event") != "event":
+        # array-native engines (DESIGN.md §15) — only the cfg-built
+        # uniform forest vectorizes; explicit MetroTopology stays exact
+        from repro.pon.fast import simulate_hier_round_fast
+        return simulate_hier_round_fast(cfg, rng, selected, onu_ids,
+                                        sample_counts, mode, obs=obs)
     if metro is None:
         metro = MetroTopology.from_config(cfg)
     n_pons = metro.n_pons
@@ -423,4 +429,5 @@ def simulate_hier_round(cfg: PonConfig, rng: np.random.Generator,
                            * cfg.model_mbits,
         "trunk_mbits": float(trunk_mbits),
         "n_metro_jobs": len(metro_jobs),
+        "sim_engine": "event",
     }

@@ -67,6 +67,14 @@ class PonConfig:
     metro_rate_mbps: float = 1000.0  # OLT→metro shared-segment channel rate
     metro_latency_ms: float = 0.5   # per-hop metro propagation latency
     metro_wavelengths: int = 1      # channels on the OLT→metro segment
+    # --- simulator engine (pon/fast/; DESIGN.md §15). "event" is the exact
+    # heap simulator; "fast" vectorizes the schedules it can compute exactly
+    # and falls back to the event sim otherwise; "hybrid" additionally
+    # replaces non-vectorizable uncongested PONs with the closed-form fluid
+    # model (ipact always stays exact — it is load-dependent) ---
+    sim_engine: str = "event"       # event | fast | hybrid
+    fluid_threshold: float = 0.8    # hybrid: offered ÷ capacity·deadline
+                                    # above this flags a PON congested
 
     @property
     def n_clients(self) -> int:
@@ -117,6 +125,16 @@ def add_pon_cli_args(ap) -> None:
     ap.add_argument("--metro-latency-ms", type=float,
                     default=d.metro_latency_ms,
                     help="per-hop metro propagation latency")
+    ap.add_argument("--sim-engine", default=d.sim_engine,
+                    choices=("event", "fast", "hybrid"),
+                    help="upstream simulator: event (exact heap), fast "
+                         "(vectorized, exact-or-event-fallback), hybrid "
+                         "(fluid model on uncongested PONs)")
+    ap.add_argument("--fluid-threshold", type=float,
+                    default=d.fluid_threshold,
+                    help="hybrid engine: offered/capacity ratio above which "
+                         "a PON is flagged congested and routed to the "
+                         "exact event sim")
 
 
 def pon_config_from_args(args) -> PonConfig:
@@ -127,7 +145,9 @@ def pon_config_from_args(args) -> PonConfig:
                      sfl_queueing=args.sfl_queueing,
                      n_pons=args.n_pons,
                      metro_rate_mbps=args.metro_rate_mbps,
-                     metro_latency_ms=args.metro_latency_ms)
+                     metro_latency_ms=args.metro_latency_ms,
+                     sim_engine=args.sim_engine,
+                     fluid_threshold=args.fluid_threshold)
 
 
 def train_times(sample_counts: np.ndarray) -> np.ndarray:

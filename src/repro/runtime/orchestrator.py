@@ -47,6 +47,7 @@ from repro.fl.loop import Callback, History
 from repro.obs.context import Obs, get as _obs_get
 from repro.pon.dba import make_dba
 from repro.pon.events import UpstreamJob, UpstreamSim
+from repro.pon.fast import FluidUpstreamSim, orchestrator_engine
 from repro.pon.metro import MetroTopology
 from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, train_times
 from repro.pon.topology import Topology
@@ -66,12 +67,12 @@ class _BridgedSim:
 
     def __init__(self, clock: SimClock, topology: Topology, dba, on_done,
                  tracer=None, metrics=None, lane: str = "pon",
-                 tid_prefix: str = "onu"):
+                 tid_prefix: str = "onu", sim_cls=UpstreamSim):
         self.clock = clock
         self.topology = topology
-        self.sim = UpstreamSim(topology, dba, on_done=on_done,
-                               tracer=tracer, metrics=metrics, lane=lane,
-                               tid_prefix=tid_prefix)
+        self.sim = sim_cls(topology, dba, on_done=on_done,
+                           tracer=tracer, metrics=metrics, lane=lane,
+                           tid_prefix=tid_prefix)
         self._ev = None
 
     def submit(self, job: UpstreamJob) -> None:
@@ -144,6 +145,9 @@ class Orchestrator:
         # is drained into each History row (take_*), while .total keeps the
         # monotonic run total — same += sequence, one authority
         reg = self.obs.metrics
+        # engine label on exported metrics records (repro.obs.diff keys on
+        # it to localize engine-choice divergences between run bundles)
+        reg.tag("sim_engine", getattr(self.pon_cfg, "sim_engine", "event"))
         self._c_up = reg.counter("pon.upstream_mbits")
         self._c_metro = reg.counter("metro.mbits")
         self._h_staleness = reg.histogram("fl.staleness")
@@ -196,16 +200,24 @@ class Orchestrator:
         # (the batch path emits retroactively instead — never both)
         trc = self.obs.tracer if self.obs.tracer.enabled else None
         reg = self.obs.metrics
+        # fast/hybrid engines swap the exact grant machine for the
+        # contention-free fluid sim — but only where that is safe: the
+        # incremental driver cannot re-run a batch on fallback, so the
+        # decision is made up front from the config (see orchestrator_engine)
+        sim_cls = (FluidUpstreamSim
+                   if orchestrator_engine(pon, self.strategy.transport)
+                   == "fluid" else UpstreamSim)
         self._pons = [_BridgedSim(self.clock, topo, make_dba(pon.dba),
                                   self._pon_job_done, tracer=trc,
-                                  metrics=reg, lane=f"pon{p}")
+                                  metrics=reg, lane=f"pon{p}",
+                                  sim_cls=sim_cls)
                       for p, topo in enumerate(self.metro_topology.pons)]
         # single-PON forests have no metro tier — the OLT is the server edge
         self._metro = (_BridgedSim(self.clock,
                                    self.metro_topology.metro_segment(),
                                    make_dba(pon.dba), self._metro_job_done,
                                    tracer=trc, metrics=reg, lane="metro",
-                                   tid_prefix="olt")
+                                   tid_prefix="olt", sim_cls=sim_cls)
                        if pon.n_pons > 1 else None)
         self.topology = self._pons[0].topology   # degenerate-case alias
         self._traffic = BackgroundTraffic(pon.background_load,
@@ -418,6 +430,7 @@ class Orchestrator:
                               "updates": len(updates)})
         rec = {"round": rnd_label, "t_s": self.clock.now,
                "policy": self.policy.name, "version": self.server_version,
+               "sim_engine": getattr(self.pon_cfg, "sim_engine", "event"),
                "involved": float(len(updates)),
                "upstream_mbits": self.take_upstream_mbits(),
                "staleness_mean": float(stale.mean()) if len(stale) else 0.0,

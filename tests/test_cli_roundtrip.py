@@ -89,6 +89,7 @@ def test_every_pon_cli_flag_reaches_pon_config_from_args():
         "--dba": "ipact", "--wavelengths": "3", "--bg-load": "0.7",
         "--onus": "5", "--clients-per-onu": "7", "--n-pons": "2",
         "--metro-rate-mbps": "123", "--metro-latency-ms": "9",
+        "--sim-engine": "fast", "--fluid-threshold": "0.5",
     }
     for flag, value in flips.items():
         cfg = pon_config_from_args(_pon_args([flag, value]))

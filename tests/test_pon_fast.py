@@ -1,0 +1,398 @@
+"""repro.pon.fast — the array-native engine's parity + policy pins.
+
+The fast engine's contract (DESIGN.md §15) is **exact-or-fallback**:
+whatever it schedules with arrays must be bit-for-bit the event heap's
+schedule, and anything it cannot schedule exactly routes to the real
+``UpstreamSim``. Only the ``hybrid`` engine is allowed to approximate,
+and only on PONs its fluid bound declares uncongested. These tests pin:
+
+  * fast == event, EXACT (full round-dict equality, arrays included),
+    across randomized topologies, DBAs, wavelength counts, background
+    loads, transports, and both drivers' entry points;
+  * ``ipact`` is never approximated — hybrid/fast route it to the event
+    sim even when the fluid bound says uncongested;
+  * the hybrid congestion flag fires exactly when offered Mbits exceed
+    ``threshold × capacity`` (strict), and a congested hybrid round is
+    bit-exact against event while an uncongested fluid round is
+    optimistic (elementwise ≤) with identical accounting totals;
+  * the closed-form ``expected_segment_mbits`` oracle holds at every
+    tier under the fast engine;
+  * the Orchestrator swaps in ``FluidUpstreamSim`` per the up-front
+    ``orchestrator_engine`` policy and stamps ``sim_engine`` into its
+    History rows; RoundLoop stamps rows and metrics records likewise.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # optional dev dep
+
+from repro import fl
+from repro.core.fedavg import FLConfig, onu_of_client
+from repro.pon import (PonConfig, expected_segment_mbits, round_times,
+                       simulate_round)
+from repro.pon.fast import (SIM_ENGINES, FluidUpstreamSim, fluid_congested,
+                            orchestrator_engine)
+from repro.pon.fast.segments import fifo_pack
+
+ALL_DBAS = ("fifo", "tdma", "ipact", "fl_priority")
+MODES = ("classical", "sfl", "hier")
+
+
+def _round(cfg, seed, per_onu_sel=2, mode="sfl"):
+    """One simulate_round call on a fresh rng (identical draws per call)."""
+    n_clients = cfg.n_pons * cfg.n_onus * cfg.clients_per_onu
+    rng = np.random.default_rng(seed)
+    n_sel = min(n_clients, per_onu_sel * cfg.n_pons * cfg.n_onus)
+    sel = rng.choice(n_clients, n_sel, replace=False)
+    onu = np.arange(n_clients) // cfg.clients_per_onu
+    k = np.random.default_rng(seed + 1).integers(50, 400, n_clients)
+    return simulate_round(cfg, np.random.default_rng(seed + 2), sel, onu,
+                          k, mode)
+
+
+def _assert_rounds_equal(ra, rb, skip=("sim_engine",)):
+    """Full round-dict equality — exact, arrays included."""
+    assert set(ra) == set(rb), (sorted(ra), sorted(rb))
+    for key in ra:
+        if key in skip:
+            continue
+        va, vb = ra[key], rb[key]
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            assert np.array_equal(np.asarray(va), np.asarray(vb)), key
+        else:
+            assert va == vb, (key, va, vb)
+
+
+# ------------------------------------------------ fast == event, exact
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), n_onus=st.integers(1, 8),
+       cpo=st.integers(1, 3), n_w=st.integers(1, 3),
+       dba=st.sampled_from(ALL_DBAS), bg=st.sampled_from((0.0, 0.5, 1.5)),
+       mode=st.sampled_from(("classical", "sfl")),
+       queueing=st.booleans())
+def test_fast_matches_event_exactly_flat(seed, n_onus, cpo, n_w, dba, bg,
+                                         mode, queueing):
+    cfg = PonConfig(n_onus=n_onus, clients_per_onu=cpo, dba=dba,
+                    n_wavelengths=n_w, background_load=bg,
+                    sfl_queueing=queueing)
+    ra = _round(cfg, seed, mode=mode)
+    rb = _round(dataclasses.replace(cfg, sim_engine="fast"), seed,
+                mode=mode)
+    assert ra["sim_engine"] == "event" and rb["sim_engine"] == "fast"
+    _assert_rounds_equal(ra, rb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30), n_pons=st.integers(2, 4),
+       n_onus=st.integers(1, 5), cpo=st.integers(1, 3),
+       n_w=st.integers(1, 2), dba=st.sampled_from(ALL_DBAS),
+       bg=st.sampled_from((0.0, 0.5)), mode=st.sampled_from(MODES),
+       queueing=st.booleans())
+def test_fast_matches_event_exactly_forest(seed, n_pons, n_onus, cpo, n_w,
+                                           dba, bg, mode, queueing):
+    cfg = PonConfig(n_onus=n_onus, clients_per_onu=cpo, dba=dba,
+                    n_wavelengths=n_w, background_load=bg,
+                    sfl_queueing=queueing, n_pons=n_pons)
+    ra = _round(cfg, seed, mode=mode)
+    rb = _round(dataclasses.replace(cfg, sim_engine="fast"), seed,
+                mode=mode)
+    _assert_rounds_equal(ra, rb)
+
+
+def test_fast_matches_event_through_round_times():
+    """The shared entry point both drivers call dispatches on the knob."""
+    cfg = PonConfig(n_onus=6, clients_per_onu=4, n_pons=3,
+                    background_load=0.8)
+    n = cfg.n_pons * cfg.n_onus * cfg.clients_per_onu
+    sel = np.random.default_rng(5).choice(n, 40, replace=False)
+    onu = np.arange(n) // cfg.clients_per_onu
+    k = np.random.default_rng(6).integers(50, 400, n)
+    ra = round_times(cfg, np.random.default_rng(7), sel, onu, k, "hier")
+    rb = round_times(dataclasses.replace(cfg, sim_engine="fast"),
+                     np.random.default_rng(7), sel, onu, k, "hier")
+    _assert_rounds_equal(ra, rb)
+
+
+# ----------------------------------------- satellite 1: ipact fallback
+
+def test_ipact_routes_to_event_even_under_hybrid():
+    """ipact's backlog-proportional grants are load-dependent; the hybrid
+    engine must serve them with the exact event sim — never the fluid
+    model — even when the fluid bound says uncongested."""
+    cfg = PonConfig(n_onus=4, clients_per_onu=4, dba="ipact",
+                    background_load=1.0, sfl_queueing=True)
+    ra = _round(cfg, 11)
+    # fluid_threshold=1e9: nothing is ever flagged congested, so any
+    # approximation would show up as a t_done difference here
+    rb = _round(dataclasses.replace(cfg, sim_engine="hybrid",
+                                    fluid_threshold=1e9), 11)
+    _assert_rounds_equal(ra, rb)
+
+
+def test_serve_queued_ipact_route(monkeypatch):
+    """Route check at the dispatcher level: ipact never takes the fluid
+    branch regardless of engine/congestion."""
+    from repro.pon.fast import engine as eng
+    calls = []
+    real = eng.make_dba
+
+    def spy(name):
+        calls.append(name)
+        return real(name)
+    monkeypatch.setattr(eng, "make_dba", spy)
+    from repro.pon.topology import Topology
+    ready = np.array([0.0, 1.0])
+    size = np.array([10.0, 10.0])
+    eng.serve_queued(ready, size, np.array([0, 1]), np.array([0, 1]),
+                     ["fl", "fl"], dba_name="ipact", n_lanes=1,
+                     rate_mbps=100.0,
+                     topo_factory=lambda: Topology.uniform(2, 1, 1),
+                     engine="hybrid", congested=False)
+    assert "ipact" in calls      # the event sim was built → exact route
+
+
+# ------------------------------------------------- hybrid fluid bound
+
+def test_fluid_congested_is_strict_at_the_threshold():
+    cap, thr = 1000.0, 0.8
+    assert not fluid_congested(800.0, cap, thr)          # == bound: fluid
+    assert fluid_congested(np.nextafter(800.0, 900.0), cap, thr)
+    flags = fluid_congested(np.array([100.0, 800.0, 801.0]), cap, thr)
+    assert flags.tolist() == [False, False, True]
+
+
+def test_hybrid_congested_pon_is_bit_exact_against_event():
+    """fluid_threshold=0 flags every loaded PON congested → the hybrid
+    engine must fall back to the event sim everywhere → exact parity."""
+    cfg = PonConfig(n_onus=5, clients_per_onu=3, dba="tdma",
+                    background_load=1.5, sfl_queueing=True, n_pons=2)
+    ra = _round(cfg, 21, mode="hier")
+    rb = _round(dataclasses.replace(cfg, sim_engine="hybrid",
+                                    fluid_threshold=0.0), 21, mode="hier")
+    _assert_rounds_equal(ra, rb)
+
+
+def test_hybrid_fluid_path_is_optimistic_with_equal_accounting():
+    """Uncongested + unpackable (tdma) → the fluid model serves the PON:
+    completions may only move EARLIER (no queueing), never later, and
+    the offered-Mbits accounting is identical."""
+    cfg = PonConfig(n_onus=4, clients_per_onu=4, dba="tdma",
+                    background_load=1.0)
+    ra = _round(cfg, 31, mode="classical")
+    rb = _round(dataclasses.replace(cfg, sim_engine="hybrid",
+                                    fluid_threshold=1e9), 31,
+                mode="classical")
+    assert rb["sim_engine"] == "hybrid"
+    assert np.all(rb["t_done"] <= ra["t_done"])
+    assert np.any(rb["t_done"] < ra["t_done"])     # tdma really queued
+    assert rb["upstream_mbits"] == ra["upstream_mbits"]
+    assert rb["n_fl_jobs"] == ra["n_fl_jobs"]
+    assert rb["bg_mbits_offered"] == ra["bg_mbits_offered"]
+
+
+# ----------------------------------------- closed-form oracle, fast eng
+
+def test_fast_engine_matches_closed_form_budget_every_tier():
+    cfg = PonConfig(n_onus=4, clients_per_onu=5, n_pons=3,
+                    sim_engine="fast")
+    n = cfg.n_pons * cfg.n_onus * cfg.clients_per_onu
+    sel = np.random.default_rng(2).choice(n, 18, replace=False)
+    onu = np.arange(n) // cfg.clients_per_onu
+    k = np.random.default_rng(1).integers(50, 400, n)
+    model = cfg.model_mbits
+    for mode in MODES:
+        rt = round_times(cfg, np.random.default_rng(1), sel, onu, k, mode)
+        n_active_pons = int(round(rt["metro_mbits"] / model)) \
+            if mode == "hier" else 3
+        want = expected_segment_mbits(
+            mode, model, n_selected=len(sel),
+            n_active_onus=rt["n_fl_jobs"], n_active_pons=n_active_pons)
+        assert rt["upstream_mbits"] == pytest.approx(want["pon"]), mode
+        if mode == "hier":
+            assert rt["trunk_mbits"] == pytest.approx(want["trunk"])
+        else:
+            assert rt["trunk_mbits"] == pytest.approx(
+                rt["n_metro_jobs"] * model), mode
+
+
+def test_fast_engine_population_scale_trunk_flatness():
+    """A 10⁴-client forest simulates in well under a second and keeps the
+    hier trunk at ONE model (the bench_scale assert, in-suite)."""
+    import time
+    trunks = []
+    for n_pons in (5, 20):
+        cfg = PonConfig(n_onus=100, clients_per_onu=2, n_pons=n_pons,
+                        sim_engine="fast")
+        n = cfg.n_pons * cfg.n_onus * cfg.clients_per_onu
+        sel = np.random.default_rng(3).choice(n, n // 2, replace=False)
+        onu = np.arange(n) // cfg.clients_per_onu
+        k = np.random.default_rng(4).integers(50, 400, n)
+        t0 = time.perf_counter()
+        rt = round_times(cfg, np.random.default_rng(5), sel, onu, k, "hier")
+        assert time.perf_counter() - t0 < 5.0
+        assert rt["involved"].sum() > 0
+        trunks.append(rt["trunk_mbits"])
+    assert trunks[0] == trunks[1] == cfg.model_mbits
+
+
+# ------------------------------------------------ segments primitives
+
+def test_fifo_pack_single_lane_matches_scalar_chain():
+    rng = np.random.default_rng(9)
+    ready = np.sort(rng.uniform(0, 20, 50))
+    service = rng.uniform(0.1, 3.0, 50)
+    st_s, dn_s = fifo_pack(ready, service, 1)
+    t = 0.0
+    for k in range(50):
+        s = t if t > ready[k] else ready[k]
+        assert st_s[k] == s and dn_s[k] == s + service[k]
+        t = s + service[k]
+
+
+# ------------------------------------------------ dispatch validation
+
+def test_unknown_engine_rejected():
+    cfg = PonConfig(n_onus=2, sim_engine="warp")
+    with pytest.raises(ValueError, match="unknown sim_engine"):
+        _round(cfg, 0)
+
+
+def test_fast_engine_rejects_explicit_overrides():
+    from repro.pon import Topology
+    cfg = PonConfig(n_onus=2, clients_per_onu=2, sim_engine="fast")
+    sel = np.array([0, 1])
+    onu = np.array([0, 0, 1, 1])
+    k = np.full(4, 100)
+    with pytest.raises(ValueError, match="explicit overrides"):
+        simulate_round(cfg, np.random.default_rng(0), sel, onu, k, "sfl",
+                       topology=Topology.uniform(2, 2, 1))
+
+
+# ------------------------------------------------ driver integration
+
+def _loop(engine, policy="sync"):
+    flc = FLConfig(n_onus=6, clients_per_onu=3, n_pons=2, n_selected=12,
+                   pon=PonConfig(sim_engine=engine, background_load=0.5))
+    cfg = fl.ExperimentConfig(fl=flc, strategy="hier_sfl", policy=policy,
+                              n_rounds=2, seed=13)
+    n = flc.n_onus * flc.clients_per_onu * flc.n_pons
+    counts = np.random.default_rng(0).integers(10, 300, n)
+    backend = fl.TransportBackend(
+        fl.make_strategy("hier_sfl", n_pons=flc.n_pons), counts,
+        onu_of_client(flc))
+    return cfg, backend
+
+
+def test_roundloop_rows_and_metrics_stamp_engine():
+    recs = {}
+    for engine in ("event", "fast"):
+        cfg, backend = _loop(engine)
+        loop = fl.RoundLoop(cfg, backend)
+        loop.run()
+        recs[engine] = loop.history.records
+        assert all(r["sim_engine"] == engine for r in recs[engine])
+        mrecs = loop.obs.metrics.records()
+        assert mrecs and all(m["sim_engine"] == engine for m in mrecs)
+        # summary() keys stay pure {metric: value} (benchmark row schema)
+        assert "sim_engine" not in loop.obs.metrics.summary()
+    for a, b in zip(recs["event"], recs["fast"]):
+        _assert_rounds_equal(a, b)
+
+
+def test_orchestrator_engine_policy():
+    base = PonConfig(sim_engine="fast")
+    assert orchestrator_engine(PonConfig(), "hier") == "event"
+    assert orchestrator_engine(base, "hier") == "fluid"
+    assert orchestrator_engine(base, "sfl") == "fluid"
+    assert orchestrator_engine(base, "classical") == "event"
+    assert orchestrator_engine(
+        dataclasses.replace(base, dba="ipact"), "hier") == "event"
+    assert orchestrator_engine(
+        dataclasses.replace(base, background_load=0.9), "hier") == "event"
+    assert orchestrator_engine(
+        dataclasses.replace(base, sfl_queueing=True), "hier") == "event"
+    with pytest.raises(ValueError, match="unknown sim_engine"):
+        orchestrator_engine(dataclasses.replace(base, sim_engine="warp"),
+                            "hier")
+
+
+def test_orchestrator_bridges_fluid_sim_and_stamps_rows():
+    from repro.pon.events import UpstreamSim
+    from repro import runtime
+    for engine, sim_cls in (("event", UpstreamSim),
+                            ("fast", FluidUpstreamSim)):
+        flc = FLConfig(n_onus=6, clients_per_onu=3, n_pons=2,
+                       n_selected=12, pon=PonConfig(sim_engine=engine))
+        cfg = fl.ExperimentConfig(fl=flc, strategy="hier_sfl",
+                                  policy="fedbuff", n_rounds=3, seed=13)
+        n = flc.n_onus * flc.clients_per_onu * flc.n_pons
+        counts = np.random.default_rng(0).integers(10, 300, n)
+        backend = fl.TransportBackend(
+            fl.make_strategy("hier_sfl", n_pons=flc.n_pons), counts,
+            onu_of_client(flc))
+        orch = runtime.Orchestrator(cfg, backend)
+        hist = orch.run(until_s=150.0)
+        assert type(orch._pons[0].sim) is sim_cls
+        assert type(orch._metro.sim) is sim_cls
+        assert hist.records and all(r["sim_engine"] == engine
+                                    for r in hist.records)
+        assert hist.records[-1]["involved"] > 0
+
+
+def test_fluid_upstream_sim_unit():
+    from repro.pon import Topology, UpstreamJob
+    from repro.obs.metrics import MetricsRegistry
+    topo = Topology.uniform(n_onus=2, n_wavelengths=1, rate_mbps=100.0)
+    done_order = []
+    reg = MetricsRegistry()
+    sim = FluidUpstreamSim(topo, on_done=done_order.append, metrics=reg)
+    a = UpstreamJob(seq=0, onu=0, size_mbits=50.0, ready_s=1.0)
+    b = UpstreamJob(seq=1, onu=1, size_mbits=200.0, ready_s=0.0)
+    sim.submit(a)
+    sim.submit(b)
+    assert a.start_s == 1.0 and a.done_s == 1.5      # private slice
+    assert b.done_s == 2.0                           # no contention with a
+    assert sim.next_event_s() == 1.5
+    sim.advance_to(1.6)
+    assert done_order == [a] and sim.now == 1.6
+    sim.drain()
+    assert done_order == [a, b]
+    assert reg.counter("pon.jobs_served").total == 250.0
+
+
+def test_fluid_sim_starves_unreachable_onus():
+    from repro.pon import Onu, Topology, UpstreamJob, Wavelength
+    topo = Topology(onus=[Onu(0, 0), Onu(1, 0, link_mbps=0.0)],
+                    wavelengths=[Wavelength(0, 100.0)])
+    sim = FluidUpstreamSim(topo)
+    j = UpstreamJob(seq=0, onu=1, size_mbits=10.0, ready_s=0.0)
+    sim.submit(j)
+    assert j.done_s == float("inf") and sim.next_event_s() is None
+
+
+# ------------------------------------------- satellite 2: bench clamps
+
+def test_bench_hierarchy_clamps_selection_to_population():
+    from benchmarks import bench_hierarchy
+    rows = bench_hierarchy.run_transport(
+        rounds=1, per_pon_selected=100, n_onus=2, clients_per_onu=2,
+        pons_list=(1,), modes=("sfl",), sim_engine="fast")
+    assert rows[0]["n_selected"] == 4        # population, not 100
+    assert rows[0]["n_clients"] == 4
+
+
+def test_bench_scale_parity_and_flatness_asserts():
+    from benchmarks import bench_scale
+    rows = bench_scale.run(n_clients_list=(40, 80), engines=("fast",
+                                                             "event"),
+                           modes=("hier_sfl",), onus_per_pon=20,
+                           clients_per_onu=1, event_cap=100)
+    assert bench_scale.check_parity(rows) == 2
+    bench_scale.check_trunk_flat(rows)
+
+
+def test_sim_engines_tuple_exported():
+    assert SIM_ENGINES == ("event", "fast", "hybrid")
