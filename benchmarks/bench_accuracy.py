@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs, fl
 from repro.core.fedavg import FLConfig

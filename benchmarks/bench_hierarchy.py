@@ -27,7 +27,7 @@ import numpy as np
 
 from repro import fl
 from repro.core.fedavg import FLConfig, onu_of_client
-from repro.pon import MODEL_UPDATE_MBITS, PonConfig, expected_segment_mbits
+from repro.pon import PonConfig, expected_segment_mbits
 
 MODES: Sequence[str] = ("classical", "sfl", "hier_sfl")
 N_PONS: Sequence[int] = (1, 2, 4, 8)

@@ -10,8 +10,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.pon import (PonConfig, add_pon_cli_args, pon_config_from_args,
-                       round_times)
+from repro.pon import PonConfig, add_pon_cli_args, pon_config_from_args, round_times
 
 
 def run(rounds: int = 30, seed: int = 0, pon: Optional[PonConfig] = None):

@@ -37,20 +37,22 @@ def _time(name, fn, *args, reps=5):
 def main():
     from benchmarks import report
 
-    key = jax.random.PRNGKey(0)
+    # independent streams for data, weights, and quantizer noise — one
+    # key is consumed at most once (REPRO203)
+    kx, kw, kq, kd = jax.random.split(jax.random.PRNGKey(0), 4)
     # the paper's ONU AF over one ONU's clients (20 x 6.6M-param CNN)
     C, N = 20, 6_603_710
-    x = jax.random.normal(key, (C, N), jnp.float32)
-    w = jax.random.uniform(key, (C,)) * 100
+    x = jax.random.normal(kx, (C, N), jnp.float32)
+    w = jax.random.uniform(kw, (C,)) * 100
     m = jnp.ones((C,))
     rows = []
     us = _time("agg_reduce", lambda a, b, c: ops.agg_reduce(a, b, c), x, w, m)
     rows.append({"name": "agg_reduce_onu20x6.6M", "us_per_call": us,
                  "derived": f"gbps={C*N*4/us/1e3:.1f}"})
-    q_us = _time("quantize_int8", lambda a: ops.quantize_int8(a, key), x[0])
+    q_us = _time("quantize_int8", lambda a: ops.quantize_int8(a, kq), x[0])
     rows.append({"name": "quantize_int8_6.6M", "us_per_call": q_us,
                  "derived": "wire_reduction=4x"})
-    qq, ss = ops.quantize_int8(x[0], key)
+    qq, ss = ops.quantize_int8(x[0], kd)
     d_us = _time("dequantize_int8",
                  lambda a, s: ops.dequantize_int8(a, s), qq, ss)
     rows.append({"name": "dequantize_int8_6.6M", "us_per_call": d_us,

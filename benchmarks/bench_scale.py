@@ -34,11 +34,10 @@ from typing import Sequence
 
 import numpy as np
 
+from benchmarks.bench_hierarchy import _mk, _segment_row
 from repro import fl
 from repro.core.fedavg import FLConfig, onu_of_client
 from repro.pon import PonConfig
-
-from benchmarks.bench_hierarchy import _mk, _segment_row
 
 MODES: Sequence[str] = ("classical", "sfl", "hier_sfl")
 ENGINES: Sequence[str] = ("fast", "event")

@@ -22,17 +22,12 @@ Three interchangeable implementations (tested equal to a numpy oracle):
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
-try:
-    from jax import shard_map  # jax >= 0.8
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 
 # ---------------------------------------------------------------------------

@@ -13,8 +13,6 @@ VMEM tiling for the TPU hot path; this module is the jnp form.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -16,7 +16,7 @@ its ``sfl_two_step``/``classical`` strategies are bit-for-bit the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

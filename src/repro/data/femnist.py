@@ -12,7 +12,6 @@ relative (documented in DESIGN.md §8): we validate the paper's *claims*
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -43,10 +43,9 @@ import numpy as np
 from repro.core import fedavg
 from repro.core.fedavg import FLConfig
 from repro.data import femnist
+from repro.fl.strategy import Strategy
 from repro.obs import profile
 from repro.obs.context import get as _obs_get
-
-from repro.fl.strategy import Strategy
 
 
 class ClientStackedBackend:

@@ -14,11 +14,9 @@ import dataclasses
 from typing import Any, Optional, Tuple
 
 from repro.core.fedavg import FLConfig
+from repro.fl.strategy import Strategy, canonical_name, make_strategy, strategy_names
 from repro.pon import add_pon_cli_args, pon_config_from_args
 from repro.runtime.failures import FailureModel
-
-from repro.fl.strategy import (Strategy, canonical_name, make_strategy,
-                               strategy_names)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,8 +33,9 @@ class ExperimentConfig:
     p_transient: float = 0.0
     mean_recovery_rounds: float = 3.0
     failure_seed: Optional[int] = None    # default: seed + 1
-    # driver (eval cadence is a backend knob: ClientStackedBackend(eval_every=…))
-    n_rounds: int = 30
+    # driver (eval cadence is a backend knob: ClientStackedBackend(eval_every=…));
+    # every driver owns its --rounds flag (defaults differ per entry point)
+    n_rounds: int = 30                    # repro: noqa(REPRO501)
     seed: int = 0
     # event-driven runtime (repro.runtime.Orchestrator) — ignored by the
     # lockstep RoundLoop driver
@@ -95,6 +94,12 @@ def add_experiment_cli_args(ap, strategy_default: str = "sfl_two_step") -> None:
                    help="per-round client crash probability (FailureModel)")
     g.add_argument("--p-transient", type=float, default=0.0,
                    help="per-round transient-failure probability (FailureModel)")
+    g.add_argument("--mean-recovery-rounds", type=float, default=3.0,
+                   help="mean rounds a crashed client stays down "
+                        "(FailureModel)")
+    g.add_argument("--failure-seed", type=int, default=None,
+                   help="FailureModel RNG seed (default: seed + 1, keeping "
+                        "the learning stream unperturbed)")
     g.add_argument("--fedprox-mu", type=float, default=None,
                    help="fedprox proximal coefficient mu (default: the "
                         "strategy's own; >0 on hier_sfl turns the proximal "
@@ -179,6 +184,8 @@ def experiment_config_from_args(args, **overrides) -> ExperimentConfig:
         fl=fl, strategy=name, strategy_kwargs=tuple(sorted(skw.items())),
         overselect=args.overselect, p_crash=args.p_crash,
         p_transient=args.p_transient,
+        mean_recovery_rounds=getattr(args, "mean_recovery_rounds", 3.0),
+        failure_seed=getattr(args, "failure_seed", None),
         seed=getattr(args, "seed", 0),
         policy=getattr(args, "policy", "sync"),
         round_window_s=getattr(args, "window_s", None),

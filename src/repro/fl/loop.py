@@ -30,10 +30,10 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.core import selection
-from repro.obs.context import Obs, get as _obs_get
-from repro.pon import round_times
-
 from repro.fl.config import ExperimentConfig
+from repro.obs.context import Obs
+from repro.obs.context import get as _obs_get
+from repro.pon import round_times
 
 
 class History:

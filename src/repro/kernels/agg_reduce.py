@@ -11,8 +11,6 @@ axis resident (C is small: ≤ clients-per-ONU), accumulating in f32.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

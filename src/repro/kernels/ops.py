@@ -13,17 +13,15 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-
-from repro.obs.profile import named_scope
 
 from repro.kernels import ref
 from repro.kernels.agg_reduce import agg_reduce as _agg_pallas
-from repro.kernels.quantize import quantize_int8 as _quant_pallas
-from repro.kernels.quantize import dequantize_int8 as _dequant_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.quantize import dequantize_int8 as _dequant_pallas
+from repro.kernels.quantize import quantize_int8 as _quant_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_pallas
+from repro.obs.profile import named_scope
 
 
 def _on_tpu() -> bool:

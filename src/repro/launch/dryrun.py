@@ -32,7 +32,6 @@ Usage:
       --set remat=dots --set fsdp=data,pod --tag myvariant
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -109,7 +108,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
     from repro import configs
     from repro.launch import specs as S
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.roofline import cost_of_compiled, roofline_terms
+    from repro.launch.roofline import roofline_terms
     from repro.models.config import shape_by_name
 
     mesh_name = "multi" if multi_pod else "single"

@@ -9,7 +9,7 @@ tests and benches see the 1 real CPU device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

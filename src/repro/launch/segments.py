@@ -10,15 +10,13 @@ shardings, so cost_analysis/HLO-parse per segment is exact per device.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.common.sharding import (
-    ShardingRules, filter_valid_spec, logical_to_physical,
-)
+from repro.common.sharding import ShardingRules, filter_valid_spec, logical_to_physical
 from repro.launch import specs as S
 from repro.launch.roofline import SegmentCost, compile_with_spmd_dump
 from repro.models import transformer
@@ -56,7 +54,6 @@ def lower_unit_segment(cfg: ModelConfig, shp: ShapeConfig, mesh: Mesh,
     cfg1 = _acc(cfg, pattern)
     abs_p, _ = S.param_shardings(cfg1, mesh, rules)
     unit_p = abs_p["unit"]  # (1, ...) stacked
-    media = None
     decode = shp.kind == "decode"
     x = _x_struct(cfg1, shp, mesh, rules, decode)
     B = shp.global_batch

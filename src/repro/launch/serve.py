@@ -21,6 +21,18 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import transformer
 
 
+def decode_frames(key, step: int, batch: int, d_model: int):
+    """Per-decode-step synthetic frame input: one fresh key per step.
+
+    Folding the step index into the data key is what makes consecutive
+    decode steps see *different* frames — reusing ``key`` directly would
+    replay the identical array every step (the REPRO203 bug class; pinned
+    by tests/test_lint.py::test_serve_decode_frames_differ_per_step).
+    """
+    return jax.random.normal(jax.random.fold_in(key, step),
+                             (batch, 1, d_model), jnp.bfloat16)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -35,20 +47,28 @@ def main():
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     mesh = make_test_mesh((len(jax.devices()), 1), ("data", "model"))
     rules = ShardingRules(batch=("data",), fsdp=None, tensor=None, expert=None)
-    key = jax.random.PRNGKey(args.seed)
+    # one root key, split once: init / prompt data / decode frames / token
+    # sampling each own an independent stream (a key is consumed at most
+    # once — REPRO203)
+    k_init, k_data, k_decode, k_sample = jax.random.split(
+        jax.random.PRNGKey(args.seed), 4)
     cache_len = args.prompt_len + args.gen
 
     with mesh:
-        params, _ = transformer.init_params(cfg, key)
+        params, _ = transformer.init_params(cfg, k_init)
         B, P = args.batch, args.prompt_len
-        batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
         if cfg.frontend == "frames":
-            batch = {"frames": jax.random.normal(key, (B, P, cfg.d_model), jnp.bfloat16),
+            batch = {"frames": jax.random.normal(
+                         k_data, (B, P, cfg.d_model), jnp.bfloat16),
                      "labels": jnp.zeros((B, P), jnp.int32)}
+        else:
+            batch = {"tokens": jax.random.randint(k_data, (B, P), 0,
+                                                  cfg.vocab_size)}
         media = None
         if cfg.frontend == "patches":
             media = jax.random.normal(
-                key, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+                jax.random.fold_in(k_data, 1),
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
             batch["patches"] = media
 
         prefill = jax.jit(lambda p, b: transformer.prefill(p, b, cfg, rules, cache_len))
@@ -68,13 +88,16 @@ def main():
             step_batch = {"tokens": tok,
                           "pos": jnp.full((B, 1), P + i, jnp.int32)}
             if cfg.frontend == "frames":
-                step_batch = {"frames": jax.random.normal(key, (B, 1, cfg.d_model), jnp.bfloat16),
+                # decode_frames folds the step index into the key, so the
+                # repeated k_decode use is a derivation, not a reuse
+                step_batch = {"frames": decode_frames(k_decode, i, B,  # repro: noqa(REPRO203)
+                                                      cfg.d_model),
                               "pos": jnp.full((B, 1), P + i, jnp.int32)}
             if media is not None:
                 step_batch["media"] = media
             logits, cache = decode(params, step_batch, cache)
             if args.temperature > 0:
-                key, sk = jax.random.split(key)
+                k_sample, sk = jax.random.split(k_sample)
                 tok = jax.random.categorical(sk, logits / args.temperature)[:, None]
             else:
                 tok = jnp.argmax(logits, -1)[:, None]

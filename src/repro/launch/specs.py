@@ -14,17 +14,13 @@ into the loss so the gradient *is* the K-normalized weighted aggregate
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.common.sharding import (
-    ShardingRules, filter_valid_spec, logical_to_physical, sharding_tree,
-)
+from repro.common.sharding import ShardingRules, filter_valid_spec, logical_to_physical
 from repro.models import transformer
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.optim import make_optimizer
@@ -74,7 +70,7 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules):
 
 def opt_state_struct(opt_name: str, params_abs):
     """Abstract optimizer state (sharded like params, fp32)."""
-    opt = make_optimizer(opt_name)
+    make_optimizer(opt_name)    # validates the name before shaping state
     if opt_name in ("sgd",):
         return {}
     f32like = lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32, sharding=x.sharding)

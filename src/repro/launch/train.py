@@ -25,7 +25,7 @@ import jax
 import numpy as np
 
 from repro import configs, fl, obs
-from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.common.sharding import ShardingRules
 from repro.launch.mesh import make_test_mesh
 from repro.obs import obs_logging

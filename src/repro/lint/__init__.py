@@ -1,0 +1,19 @@
+"""repro.lint — domain-aware static analysis for the repro stack.
+
+Turns the repo's implicit contracts (SimClock-only time, single-use PRNG
+keys, unit-suffix hygiene, jit purity, config reach-through) into
+AST-checked rules with stable ``REPROxxx`` codes, inline
+``# repro: noqa(CODE)`` waivers, and text/JSON reporters. Run as::
+
+    PYTHONPATH=src python -m repro.lint src benchmarks
+
+See DESIGN.md §16 for the rule registry and waiver policy.
+"""
+from repro.lint.core import (FileContext, LintResult, Project, Rule,
+                             Violation, all_rules, register, run_lint)
+from repro.lint.reporters import json_report, text_report
+
+__all__ = [
+    "FileContext", "LintResult", "Project", "Rule", "Violation",
+    "all_rules", "register", "run_lint", "json_report", "text_report",
+]

@@ -1,0 +1,47 @@
+"""CLI: ``python -m repro.lint [paths] [--format json] [--select ...]``.
+
+Exit status 0 when clean (after waivers), 1 on any violation or parse
+error — the CI ``lint`` job gates on this before tier-1 runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.lint.core import run_lint
+from repro.lint.reporters import json_report, rules_listing, text_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Domain-aware static analysis: determinism, units, "
+                    "RNG discipline, jit purity, config reach-through "
+                    "(DESIGN.md §16).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="CODE",
+                    help="only run rules whose code starts with CODE "
+                         "(repeatable; REPRO2 selects the RNG family)")
+    ap.add_argument("--ignore", action="append", default=None,
+                    metavar="CODE",
+                    help="skip rules whose code starts with CODE")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(rules_listing())
+        return 0
+
+    result = run_lint(args.paths or ["src"], select=args.select,
+                      ignore=args.ignore)
+    print(json_report(result) if args.format == "json"
+          else text_report(result))
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

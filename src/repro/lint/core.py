@@ -1,0 +1,257 @@
+"""repro.lint core — rule registry, waivers, and the file-walking driver.
+
+The linter turns this repo's implicit determinism/accounting contracts —
+simulated time flows through ``SimClock``, RNG streams are seeded and keys
+are single-use, ``_mbits``/``_bytes``/``_s`` quantities never mix without a
+conversion, jitted/Pallas code stays pure, every config field is reachable
+and consumed — into machine-checked rules that fail in CI *before* a test
+runs (DESIGN.md §16).
+
+Anatomy:
+
+  * :class:`Rule` — one named check with a stable code (``REPROxxx``).
+    Per-file rules implement ``check(ctx)``; project-wide rules (config
+    reach-through needs to see every file at once) additionally implement
+    ``finalize(project)`` after all files were offered.
+  * :class:`FileContext` — parsed AST + source + module path for one file,
+    including the resolved import table (``ctx.imports``) so rules match
+    ``perf_counter`` whether it arrived via ``import time`` or
+    ``from time import perf_counter as pc``.
+  * Waivers — ``# repro: noqa(CODE)`` on the flagged line suppresses that
+    code; a bare ``# repro: noqa`` suppresses every repro rule on the
+    line. Waivers are deliberate, greppable, and reviewed like code.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Type
+
+#: waiver comment syntax: ``# repro: noqa`` or ``# repro: noqa(RULE1,RULE2)``
+_NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa(?:\s*\(\s*(?P<codes>[A-Z0-9,\s]+?)\s*\))?", re.I)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: a stable rule code anchored to a file:line:col."""
+
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class Rule:
+    """Base class for one lint rule (subclass + :func:`register`).
+
+    ``scopes`` restricts per-file checks to module paths that contain any
+    of the given fragments (e.g. ``("repro/pon",)``); empty means every
+    file. Project rules see every file regardless and emit from
+    ``finalize``.
+    """
+
+    code: str = ""
+    name: str = ""
+    summary: str = ""
+    scopes: Tuple[str, ...] = ()
+
+    def applies_to(self, ctx: "FileContext") -> bool:
+        if not self.scopes:
+            return True
+        norm = ctx.path.replace(os.sep, "/")
+        return any(s in norm for s in self.scopes)
+
+    def check(self, ctx: "FileContext") -> Iterable[Violation]:
+        return ()
+
+    def finalize(self, project: "Project") -> Iterable[Violation]:
+        return ()
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator: add a Rule subclass to the global registry."""
+    if not cls.code:
+        raise ValueError(f"rule {cls.__name__} has no code")
+    if cls.code in _REGISTRY:
+        raise ValueError(f"duplicate rule code {cls.code}")
+    _REGISTRY[cls.code] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    """code -> Rule class, importing the built-in rule modules first."""
+    from repro.lint import rules  # noqa: F401  (import populates _REGISTRY)
+
+    return dict(sorted(_REGISTRY.items()))
+
+
+class ImportTable:
+    """Local name -> dotted origin, resolved from a module's imports.
+
+    ``import time`` maps ``time -> time``; ``from time import
+    perf_counter as pc`` maps ``pc -> time.perf_counter``. Rules resolve
+    call targets through :meth:`resolve` so aliasing can't dodge a check.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.names: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.names[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.names[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted path of a Name/Attribute chain with imports expanded."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.names.get(node.id, node.id)
+        return ".".join([root] + list(reversed(parts)))
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a per-file rule needs about one source file."""
+
+    path: str               # as given on the command line (stable in output)
+    source: str
+    tree: ast.Module
+    imports: ImportTable
+    lines: List[str]
+
+    @classmethod
+    def parse(cls, path: str, source: Optional[str] = None) -> "FileContext":
+        if source is None:
+            with tokenize.open(path) as f:
+                source = f.read()
+        tree = ast.parse(source, filename=path)
+        return cls(path=path, source=source, tree=tree,
+                   imports=ImportTable(tree), lines=source.splitlines())
+
+    def waived_codes(self, line: int) -> Optional[Set[str]]:
+        """Codes waived on ``line`` (empty set = all), or None if no waiver."""
+        if not (1 <= line <= len(self.lines)):
+            return None
+        m = _NOQA_RE.search(self.lines[line - 1])
+        if m is None:
+            return None
+        codes = m.group("codes")
+        if codes is None:
+            return set()
+        return {c.strip().upper() for c in codes.split(",") if c.strip()}
+
+
+@dataclasses.dataclass
+class Project:
+    """The full analyzed file set, handed to project-wide rules."""
+
+    files: List[FileContext] = dataclasses.field(default_factory=list)
+
+    def by_path(self, path: str) -> Optional[FileContext]:
+        for f in self.files:
+            if f.path == path:
+                return f
+        return None
+
+
+def iter_python_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted .py file list."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__" and not d.startswith("."))
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def _apply_waivers(violations: Iterable[Violation],
+                   files: Dict[str, FileContext]) -> Tuple[List[Violation], int]:
+    kept: List[Violation] = []
+    waived = 0
+    for v in violations:
+        ctx = files.get(v.path)
+        codes = ctx.waived_codes(v.line) if ctx is not None else None
+        if codes is not None and (not codes or v.code.upper() in codes):
+            waived += 1
+            continue
+        kept.append(v)
+    return kept, waived
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: List[Violation]
+    n_files: int
+    n_waived: int
+    parse_errors: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.parse_errors
+
+
+def run_lint(paths: Sequence[str],
+             select: Optional[Sequence[str]] = None,
+             ignore: Optional[Sequence[str]] = None) -> LintResult:
+    """Lint ``paths`` with the registered rules; waivers already applied.
+
+    ``select``/``ignore`` filter by rule code (prefix match, so ``REPRO2``
+    selects the whole RNG family). Unreadable/unparsable files are
+    reported as errors, not skipped silently.
+    """
+    classes = all_rules()
+    codes = list(classes)
+    if select:
+        sel = tuple(s.upper() for s in select)
+        codes = [c for c in codes if c.startswith(sel)]
+    if ignore:
+        ign = tuple(s.upper() for s in ignore)
+        codes = [c for c in codes if not c.startswith(ign)]
+    rules = [classes[c]() for c in codes]
+
+    project = Project()
+    files: Dict[str, FileContext] = {}
+    parse_errors: List[str] = []
+    for path in iter_python_files(paths):
+        try:
+            ctx = FileContext.parse(path)
+        except (SyntaxError, OSError, UnicodeDecodeError) as e:
+            parse_errors.append(f"{path}: {e}")
+            continue
+        project.files.append(ctx)
+        files[path] = ctx
+
+    raw: List[Violation] = []
+    for ctx in project.files:
+        for rule in rules:
+            if rule.applies_to(ctx):
+                raw.extend(rule.check(ctx))
+    for rule in rules:
+        raw.extend(rule.finalize(project))
+
+    kept, waived = _apply_waivers(raw, files)
+    kept.sort(key=lambda v: (v.path, v.line, v.col, v.code))
+    return LintResult(violations=kept, n_files=len(project.files),
+                      n_waived=waived, parse_errors=parse_errors)

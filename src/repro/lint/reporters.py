@@ -1,0 +1,47 @@
+"""Output formats for lint results: human text and machine JSON."""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict
+
+from repro.lint.core import LintResult, all_rules
+
+#: schema tag on the JSON report, matching the repo-wide convention
+SCHEMA = "repro.lint/v1"
+
+
+def text_report(result: LintResult) -> str:
+    lines = [v.format() for v in result.violations]
+    lines.extend(f"{e}: parse error" for e in result.parse_errors)
+    counts: Dict[str, int] = {}
+    for v in result.violations:
+        counts[v.code] = counts.get(v.code, 0) + 1
+    by_code = " ".join(f"{c}:{n}" for c, n in sorted(counts.items()))
+    tail = (f"{len(result.violations)} violation(s)"
+            f"{' [' + by_code + ']' if by_code else ''}, "
+            f"{result.n_waived} waived, {result.n_files} file(s)")
+    lines.append(tail if result.violations or result.parse_errors
+                 else f"clean: {tail}")
+    return "\n".join(lines)
+
+
+def json_report(result: LintResult) -> str:
+    doc: Dict[str, Any] = {
+        "lint_schema": SCHEMA,
+        "n_files": result.n_files,
+        "n_waived": result.n_waived,
+        "parse_errors": result.parse_errors,
+        "violations": [
+            {"code": v.code, "path": v.path, "line": v.line, "col": v.col,
+             "message": v.message} for v in result.violations],
+    }
+    return json.dumps(doc, indent=2)
+
+
+def rules_listing() -> str:
+    """``--list-rules`` output: code, name, scope, summary per rule."""
+    rows = []
+    for code, cls in all_rules().items():
+        scope = ",".join(cls.scopes) if cls.scopes else "everywhere"
+        rows.append("{code}  {cls.name:22s} [{scope}]\n    {cls.summary}")
+    return "\n".join(rows)

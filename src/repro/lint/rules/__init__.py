@@ -1,0 +1,18 @@
+"""Built-in domain rules; importing this package registers them all.
+
+Rule code map (DESIGN.md §16):
+
+  * REPRO101 — sim-clock purity (rules/clock.py)
+  * REPRO201 — numpy global-state RNG (rules/rng.py)
+  * REPRO202 — unseeded ``default_rng()`` (rules/rng.py)
+  * REPRO203 — jax PRNG key reuse (rules/rng.py)
+  * REPRO301 — units hygiene (rules/units.py)
+  * REPRO401 — Python branch on traced values under jit/pallas
+    (rules/purity.py)
+  * REPRO402 — mutable captures under jit/pallas (rules/purity.py)
+  * REPRO501 — config field not CLI-reachable (rules/config.py)
+  * REPRO502 — config field never consumed (rules/config.py)
+"""
+from repro.lint.rules import clock, config, purity, rng, units
+
+__all__ = ["clock", "config", "purity", "rng", "units"]

@@ -1,0 +1,57 @@
+"""REPRO101 — sim-clock purity: no wall-clock reads in simulation code.
+
+The paper's results are *simulated-seconds* results: resume replay equals
+an uninterrupted run and ``fast`` equals ``event`` bit for bit only
+because nothing inside ``repro/pon``, ``repro/runtime``, ``repro/fl``,
+``repro/hier``, or ``repro/core`` ever reads the host clock — simulated
+time flows exclusively through ``SimClock`` (repro.runtime.clock) and the
+event heap. A single ``time.time()`` in a scheduling path silently breaks
+replay determinism under load.
+
+Wall-clock lanes live in ``repro/obs`` (tracer host-time offsets, logging
+timestamps, profiler) and in ``launch``/``benchmarks`` wall-time
+measurement — all outside this rule's scope by construction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.lint.core import FileContext, Rule, Violation, register
+
+#: dotted call targets that read the host clock
+WALL_CLOCK_CALLS = frozenset({
+    "time.time", "time.time_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "time.clock",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+})
+
+
+@register
+class SimClockPurity(Rule):
+    code = "REPRO101"
+    name = "sim-clock-purity"
+    summary = ("wall-clock read inside simulation code — simulated time "
+               "must flow through SimClock")
+    scopes = ("repro/pon", "repro/runtime", "repro/fl", "repro/hier",
+              "repro/core")
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.imports.resolve(node.func)
+            if target in WALL_CLOCK_CALLS:
+                out.append(Violation(
+                    code=self.code, path=ctx.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"wall-clock read `{target}()` in simulation "
+                             "code; route simulated time through SimClock "
+                             "(repro.runtime.clock) or move the wall lane "
+                             "to repro.obs")))
+        return out

@@ -1,0 +1,109 @@
+"""REPRO501/502 — config reach-through: no dead or unreachable knobs.
+
+PR 2 shipped a dead ``eval_every`` field that parsed from the CLI and was
+silently ignored; this rule makes the class of bug structural. For every
+field of the experiment-defining dataclasses (``PonConfig``,
+``ExperimentConfig``):
+
+  * REPRO501 — the field must be *CLI-reachable*: passed as an explicit
+    keyword when the class is constructed inside a ``*_from_args`` builder
+    (the shared-argparse pattern every driver goes through). A field you
+    can't set from the flag set is an experiment axis that silently
+    doesn't exist for CLI users. Deliberate constants (paper-pinned
+    values, driver-owned knobs) carry a ``# repro: noqa(REPRO501)`` with
+    the reason on the field line.
+  * REPRO502 — the field must be *consumed*: read as an attribute
+    somewhere in the analyzed set (``args.<field>`` plumbing in the CLI
+    builders doesn't count — parsing a knob isn't using it).
+
+Violations anchor to the field's definition line in the dataclass, so the
+waiver sits exactly where the next reader looks.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.lint.core import Project, Rule, Violation, register
+
+#: dataclasses whose fields define the experiment surface
+TARGET_CLASSES = ("PonConfig", "ExperimentConfig")
+
+#: functions recognized as CLI builders (the shared-argparse pattern)
+_BUILDER_SUFFIX = "_from_args"
+
+
+def _scan(project: Project) -> Tuple[
+        Dict[str, Dict[str, Tuple[str, int]]],   # class -> field -> (path, line)
+        Dict[str, Set[str]],                     # class -> CLI-passed keywords
+        Set[str]]:                               # attribute names read anywhere
+    fields: Dict[str, Dict[str, Tuple[str, int]]] = {}
+    cli_kw: Dict[str, Set[str]] = {c: set() for c in TARGET_CLASSES}
+    consumed: Set[str] = set()
+
+    for ctx in project.files:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef) and node.name in TARGET_CLASSES:
+                for st in node.body:
+                    if isinstance(st, ast.AnnAssign) and \
+                            isinstance(st.target, ast.Name):
+                        fields.setdefault(node.name, {})[st.target.id] = \
+                            (ctx.path, st.lineno)
+            elif isinstance(node, ast.FunctionDef) and \
+                    node.name.endswith(_BUILDER_SUFFIX):
+                for call in ast.walk(node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    dotted = ctx.imports.resolve(call.func) or ""
+                    cls = dotted.split(".")[-1]
+                    if cls in cli_kw:
+                        cli_kw[cls].update(kw.arg for kw in call.keywords
+                                           if kw.arg is not None)
+            elif isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, ast.Load):
+                # args.<name> is CLI plumbing, not consumption
+                if not (isinstance(node.value, ast.Name)
+                        and node.value.id == "args"):
+                    consumed.add(node.attr)
+    return fields, cli_kw, consumed
+
+
+@register
+class ConfigCliReach(Rule):
+    code = "REPRO501"
+    name = "config-cli-reach"
+    summary = "config dataclass field not reachable from the shared CLI"
+
+    def finalize(self, project: Project) -> Iterable[Violation]:
+        fields, cli_kw, _ = _scan(project)
+        out: List[Violation] = []
+        for cls, fmap in fields.items():
+            for field, (path, line) in fmap.items():
+                if field not in cli_kw.get(cls, set()):
+                    out.append(Violation(
+                        code=self.code, path=path, line=line, col=0,
+                        message=(f"{cls}.{field} is not passed as a keyword "
+                                 f"in any *{_BUILDER_SUFFIX} builder — add "
+                                 "a CLI flag or waive as a deliberate "
+                                 "constant")))
+        return out
+
+
+@register
+class ConfigConsumed(Rule):
+    code = "REPRO502"
+    name = "config-consumed"
+    summary = "config dataclass field never read anywhere (dead knob)"
+
+    def finalize(self, project: Project) -> Iterable[Violation]:
+        fields, _, consumed = _scan(project)
+        out: List[Violation] = []
+        for cls, fmap in fields.items():
+            for field, (path, line) in fmap.items():
+                if field not in consumed:
+                    out.append(Violation(
+                        code=self.code, path=path, line=line, col=0,
+                        message=(f"{cls}.{field} is parsed/stored but never "
+                                 "read — a dead knob (the PR 2 eval_every "
+                                 "bug class); consume it or delete it")))
+        return out

@@ -1,0 +1,176 @@
+"""REPRO401/402 — jit/Pallas purity heuristics.
+
+Traced code must be functionally pure: Python-level control flow on traced
+values either crashes at trace time (`ConcretizationTypeError`) or — worse
+— silently bakes one branch into the compiled artifact; mutable state
+captured from the enclosing module is read once at trace time and then
+frozen, so later mutations are invisible to the compiled function (a
+classic "works in eager, wrong under jit" bug).
+
+  * REPRO401 — a ``jit``-decorated function (or a kernel passed to
+    ``pallas_call``) branches with Python ``if``/``while`` on one of its
+    own parameters. Parameters of jitted functions are tracers unless
+    static-marked; branch with ``jnp.where``/``lax.cond``/``lax.select``
+    instead, or mark the argument static and waive.
+  * REPRO402 — a jitted/kernel function reads a module-level *mutable*
+    binding (list/dict/set literal) or declares a mutable default
+    argument. The capture is traced once; mutation after compile is a
+    silent no-op.
+
+Heuristics by design: ``static_argnums`` isn't resolved, so a legitimate
+static branch gets a ``# repro: noqa(REPRO401)`` with the reason — the
+waiver is the documentation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.lint.core import FileContext, Rule, Violation, register
+
+MUTABLE_CTORS = frozenset({"list", "dict", "set", "bytearray", "deque",
+                           "defaultdict", "Counter", "OrderedDict"})
+
+
+def _is_jit_dotted(dotted: Optional[str]) -> bool:
+    return dotted is not None and (
+        dotted in ("jax.jit", "jit", "pjit", "jax.pjit")
+        or dotted.endswith(".jit") or dotted.endswith(".pjit"))
+
+
+def _jit_decorated(node: ast.AST, ctx: FileContext) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _is_jit_dotted(ctx.imports.resolve(target)):
+            return True
+        # @partial(jax.jit, ...) / @functools.partial(jit, ...)
+        if isinstance(dec, ast.Call):
+            dotted = ctx.imports.resolve(dec.func) or ""
+            if dotted.split(".")[-1] == "partial" and dec.args:
+                if _is_jit_dotted(ctx.imports.resolve(dec.args[0])):
+                    return True
+    return False
+
+
+def _traced_function_names(ctx: FileContext) -> Dict[str, str]:
+    """name -> why ('jit'|'kernel') for functions traced indirectly:
+    ``jax.jit(fn)`` applied to a named function, and kernels passed as the
+    first argument of ``pallas_call``."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = ctx.imports.resolve(node.func) or ""
+        last = dotted.split(".")[-1]
+        if _is_jit_dotted(dotted) and node.args and \
+                isinstance(node.args[0], ast.Name):
+            out[node.args[0].id] = "jit"
+        elif last == "pallas_call" and node.args and \
+                isinstance(node.args[0], ast.Name):
+            out[node.args[0].id] = "kernel"
+    return out
+
+
+def _module_mutables(ctx: FileContext) -> Set[str]:
+    """Module-level names bound to mutable literals/constructors."""
+    out: Set[str] = set()
+    for st in ctx.tree.body:
+        targets: List[ast.expr] = []
+        value: Optional[ast.expr] = None
+        if isinstance(st, ast.Assign):
+            targets, value = st.targets, st.value
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            targets, value = [st.target], st.value
+        if value is None:
+            continue
+        mutable = isinstance(value, (ast.List, ast.Dict, ast.Set,
+                                     ast.ListComp, ast.DictComp, ast.SetComp))
+        if isinstance(value, ast.Call):
+            dotted = ctx.imports.resolve(value.func) or ""
+            mutable = dotted.split(".")[-1] in MUTABLE_CTORS
+        if mutable:
+            out.update(t.id for t in targets if isinstance(t, ast.Name))
+    return out
+
+
+def _check_traced_fn(ctx: FileContext, fn: ast.FunctionDef, why: str,
+                     mutables: Set[str],
+                     out: List[Violation]) -> None:
+    params = {a.arg for a in (fn.args.posonlyargs + fn.args.args +
+                              fn.args.kwonlyargs)}
+    local_assigns: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and \
+                isinstance(node.ctx, (ast.Store, ast.Del)):
+            local_assigns.add(node.id)
+
+    # REPRO402: mutable default args freeze at def time under tracing too
+    for default in fn.args.defaults + [d for d in fn.args.kw_defaults
+                                       if d is not None]:
+        if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+            out.append(Violation(
+                code="REPRO402", path=ctx.path, line=default.lineno,
+                col=default.col_offset,
+                message=(f"mutable default argument on {why} function "
+                         f"`{fn.name}` is captured at trace time")))
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            names = {n.id for n in ast.walk(node.test)
+                     if isinstance(n, ast.Name)}
+            traced = sorted(names & params)
+            if traced:
+                out.append(Violation(
+                    code="REPRO401", path=ctx.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"Python branch on parameter(s) "
+                             f"{', '.join(traced)} of {why} function "
+                             f"`{fn.name}` — traced values need "
+                             "jnp.where/lax.cond (or mark static and "
+                             "waive)")))
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in mutables and node.id not in params and \
+                    node.id not in local_assigns:
+                out.append(Violation(
+                    code="REPRO402", path=ctx.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"{why} function `{fn.name}` reads module-"
+                             f"level mutable `{node.id}`; the capture is "
+                             "frozen at trace time — pass it as an "
+                             "argument or make it immutable")))
+
+
+def _purity_violations(ctx: FileContext) -> List[Violation]:
+    """Both purity codes for one file (each rule filters its own)."""
+    out: List[Violation] = []
+    traced = _traced_function_names(ctx)
+    mutables = _module_mutables(ctx)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        why = traced.get(node.name)
+        if why is None and _jit_decorated(node, ctx):
+            why = "jit"
+        if why is not None:
+            _check_traced_fn(ctx, node, why, mutables, out)
+    return out
+
+
+@register
+class JitPurity(Rule):
+    code = "REPRO401"
+    name = "jit-traced-branch"
+    summary = "Python control flow on traced values inside jit/pallas"
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        return [v for v in _purity_violations(ctx) if v.code == self.code]
+
+
+@register
+class JitMutableCapture(Rule):
+    code = "REPRO402"
+    name = "jit-mutable-capture"
+    summary = "mutable module state or defaults captured by traced code"
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        return [v for v in _purity_violations(ctx) if v.code == self.code]

@@ -1,0 +1,285 @@
+"""REPRO201/202/203 — RNG discipline.
+
+Every random draw in this repo belongs to an owned, seeded stream:
+``np.random.default_rng(seed)`` Generators threaded explicitly (the
+RoundLoop replay contract — resume == uninterrupted — depends on counting
+every draw), and jax PRNG keys that are consumed exactly once (split or
+fold_in to derive more). Three rules:
+
+  * REPRO201 — global-state ``np.random.<fn>()`` calls (``seed``, ``rand``,
+    ``randint``, ``shuffle``, …). These share one hidden stream across the
+    whole process: any library/test that also touches it perturbs replay.
+  * REPRO202 — ``default_rng()`` with no seed argument in library code: an
+    OS-entropy stream that makes two "identical" runs differ.
+  * REPRO203 — a jax PRNG key passed to two consuming calls without a
+    ``split``/``fold_in`` between them. The two draws are then *identical
+    arrays*, which is almost never intended (and inside a loop it means
+    every iteration re-samples the same values — the bug class this rule
+    exists for). Derivation calls (``split``, ``fold_in``) don't consume:
+    folding a base key with distinct step data is the blessed pattern
+    (see core/aggregation.py).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.lint.core import FileContext, Rule, Violation, register
+
+#: numpy.random module-level functions that mutate the hidden global state
+NP_GLOBAL_FNS = frozenset({
+    "seed", "random", "rand", "randn", "randint", "random_integers",
+    "random_sample", "ranf", "sample", "uniform", "normal", "standard_normal",
+    "choice", "shuffle", "permutation", "beta", "binomial", "bytes",
+    "chisquare", "dirichlet", "exponential", "gamma", "geometric", "gumbel",
+    "hypergeometric", "laplace", "logistic", "lognormal", "multinomial",
+    "multivariate_normal", "negative_binomial", "pareto", "poisson", "power",
+    "rayleigh", "triangular", "vonmises", "wald", "weibull", "zipf",
+    "get_state", "set_state",
+})
+
+#: jax.random functions that DERIVE new keys (legitimate multi-use of base)
+JAX_DERIVE_FNS = frozenset({"split", "fold_in", "clone", "key_data",
+                            "wrap_key_data", "key_impl"})
+
+#: names whose assignment marks a variable as holding a PRNG key
+JAX_KEY_MAKERS = frozenset({"PRNGKey", "key"}) | JAX_DERIVE_FNS
+
+
+def _np_random_fn(dotted: Optional[str]) -> Optional[str]:
+    """The global-state fn name if ``dotted`` is numpy.random.<fn>."""
+    if not dotted:
+        return None
+    parts = dotted.split(".")
+    if len(parts) >= 2 and parts[-2] == "random" and \
+            parts[0] in ("numpy", "np") and parts[-1] in NP_GLOBAL_FNS:
+        return parts[-1]
+    return None
+
+
+def _jax_random_fn(dotted: Optional[str]) -> Optional[str]:
+    """The jax.random fn name if ``dotted`` resolves under jax.random."""
+    if not dotted:
+        return None
+    parts = dotted.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom", "jrd") and \
+            parts[0] in ("jax", "random", "jrandom", "jrd"):
+        return parts[-1]
+    # ``from jax.random import normal`` resolves to jax.random.normal above;
+    # ``from jax import random`` then random.normal resolves via the table
+    return None
+
+
+@register
+class NumpyGlobalState(Rule):
+    code = "REPRO201"
+    name = "np-global-rng"
+    summary = "np.random global-state call; thread a seeded Generator"
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = _np_random_fn(ctx.imports.resolve(node.func))
+            if fn is not None:
+                out.append(Violation(
+                    code=self.code, path=ctx.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=(f"global-state `np.random.{fn}()` shares one "
+                             "hidden stream process-wide; use a seeded "
+                             "`np.random.default_rng(seed)` Generator "
+                             "threaded through the call chain")))
+        return out
+
+
+@register
+class UnseededDefaultRng(Rule):
+    code = "REPRO202"
+    name = "unseeded-rng"
+    summary = "default_rng() without a seed in library code"
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.imports.resolve(node.func) or ""
+            if not dotted.endswith("default_rng"):
+                continue
+            seeded = bool(node.args) or any(
+                kw.arg in (None, "seed") for kw in node.keywords)
+            if not seeded:
+                out.append(Violation(
+                    code=self.code, path=ctx.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=("`default_rng()` without a seed draws OS "
+                             "entropy — two identical runs will differ; "
+                             "pass an explicit seed")))
+        return out
+
+
+class _KeyFlow:
+    """Linear dataflow over one function body tracking PRNG key freshness.
+
+    State machine per variable name: *fresh* (assigned from PRNGKey /
+    split / fold_in, or a ``key``-named parameter) → *consumed* (passed to
+    a sampling call or any non-derivation callee). Consuming a *consumed*
+    key is a violation. Loop bodies are walked twice so a consumption that
+    survives to the next iteration un-refreshed is caught; ``if``/``else``
+    branches fork the state and merge by union (consumed-in-either), which
+    never flags across exclusive branches but does catch reuse after the
+    join.
+    """
+
+    def __init__(self, ctx: FileContext, code: str):
+        self.ctx = ctx
+        self.code = code
+        self.violations: List[Violation] = []
+        self._seen: Set[Tuple[int, str]] = set()
+
+    # -- helpers -----------------------------------------------------------
+    def _is_key_expr(self, node: ast.AST) -> bool:
+        """Does this expression produce a PRNG key (maker/derive call)?"""
+        if isinstance(node, ast.Call):
+            dotted = self.ctx.imports.resolve(node.func) or ""
+            last = dotted.split(".")[-1]
+            return last in JAX_KEY_MAKERS and (
+                last == "PRNGKey" or _jax_random_fn(dotted) is not None
+                or "random" in dotted)
+        return False
+
+    def _flag(self, name: str, node: ast.Call) -> None:
+        sig = (node.lineno, name)
+        if sig in self._seen:
+            return
+        self._seen.add(sig)
+        self.violations.append(Violation(
+            code=self.code, path=self.ctx.path, line=node.lineno,
+            col=node.col_offset,
+            message=(f"PRNG key `{name}` already consumed by an earlier "
+                     "call — the two draws are identical; derive a fresh "
+                     "key with jax.random.split/fold_in first")))
+
+    # -- driver ------------------------------------------------------------
+    def run(self, fn: ast.AST, params: List[str]) -> None:
+        state: Dict[str, str] = {
+            p: "fresh" for p in params
+            if p == "key" or p.endswith("_key") or p.endswith("key")}
+        body = getattr(fn, "body", [])
+        self._stmts(body, state)
+
+    def _stmts(self, stmts: List[ast.stmt], state: Dict[str, str]) -> None:
+        for st in stmts:
+            self._stmt(st, state)
+
+    def _assign_targets(self, targets: List[ast.expr], value: ast.expr,
+                        state: Dict[str, str]) -> None:
+        fresh = self._is_key_expr(value)
+        for t in targets:
+            elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+            for e in elts:
+                if isinstance(e, ast.Name):
+                    if fresh:
+                        state[e.id] = "fresh"
+                    elif e.id in state:
+                        # overwritten with a non-key value: stop tracking
+                        del state[e.id]
+
+    def _stmt(self, st: ast.stmt, state: Dict[str, str]) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return      # nested scopes are analyzed separately
+        if isinstance(st, ast.Assign):
+            self._expr(st.value, state)
+            self._assign_targets(st.targets, st.value, state)
+            return
+        if isinstance(st, (ast.AnnAssign, ast.AugAssign)):
+            if st.value is not None:
+                self._expr(st.value, state)
+                self._assign_targets([st.target], st.value, state)
+            return
+        if isinstance(st, (ast.If, ast.While)):
+            self._expr(st.test, state)
+            branches = [st.body, st.orelse]
+            forks = []
+            for br in branches:
+                fork = dict(state)
+                n_passes = 2 if isinstance(st, ast.While) else 1
+                for _ in range(n_passes):
+                    self._stmts(br, fork)
+                forks.append(fork)
+            self._merge(state, forks)
+            return
+        if isinstance(st, ast.For):
+            self._expr(st.iter, state)
+            # the loop target is assigned fresh-unknown each iteration
+            fork = dict(state)
+            self._assign_targets([st.target], ast.Constant(value=None), fork)
+            for _ in range(2):      # second pass catches cross-iteration reuse
+                self._stmts(st.body, fork)
+            self._stmts(st.orelse, fork)
+            self._merge(state, [fork])
+            return
+        if isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self._expr(item.context_expr, state)
+            self._stmts(st.body, state)
+            return
+        if isinstance(st, ast.Try):
+            self._stmts(st.body, state)
+            for h in st.handlers:
+                self._stmts(h.body, state)
+            self._stmts(st.orelse, state)
+            self._stmts(st.finalbody, state)
+            return
+        if isinstance(st, ast.Return) and st.value is not None:
+            # returning a key hands ownership out — not a consumption
+            return
+        if isinstance(st, ast.Expr):
+            self._expr(st.value, state)
+            return
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.expr):
+                self._expr(child, state)
+
+    def _merge(self, state: Dict[str, str],
+               forks: List[Dict[str, str]]) -> None:
+        for fork in forks:
+            for name, val in fork.items():
+                if val == "consumed":
+                    state[name] = "consumed"
+
+    def _expr(self, node: ast.expr, state: Dict[str, str]) -> None:
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            dotted = self.ctx.imports.resolve(call.func) or ""
+            last = dotted.split(".")[-1]
+            if last in JAX_DERIVE_FNS:
+                continue            # split/fold_in: derivation, not a draw
+            arg_names = [a.id for a in call.args if isinstance(a, ast.Name)]
+            arg_names += [kw.value.id for kw in call.keywords
+                          if isinstance(kw.value, ast.Name)]
+            for name in arg_names:
+                if name not in state:
+                    continue
+                if state[name] == "consumed":
+                    self._flag(name, call)
+                state[name] = "consumed"
+
+
+@register
+class JaxKeyReuse(Rule):
+    code = "REPRO203"
+    name = "jax-key-reuse"
+    summary = "jax PRNG key consumed twice without split/fold_in"
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        flow = _KeyFlow(ctx, self.code)
+        flow.run(ctx.tree, [])      # module-level script bodies count too
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                params = [a.arg for a in (node.args.posonlyargs +
+                                          node.args.args +
+                                          node.args.kwonlyargs)]
+                flow.run(node, params)
+        return flow.violations

@@ -1,0 +1,106 @@
+"""REPRO301 — units hygiene: no cross-unit arithmetic without a conversion.
+
+The paper's constant-bandwidth headline is an *accounting* result: the
+per-segment sums in ``pon/metro.py`` / ``pon/fast/`` add ``*_mbits``
+quantities, the deadline logic compares ``*_s`` quantities, and the whole
+repo already had one unit incident (the 26.416 "Mbits"-that-were-MBytes
+correction in DESIGN.md §8). This rule flags ``+``/``-``/comparison
+between names carrying *different* unit suffixes (``theta_mbits +
+hdr_bytes``, ``t_ms < deadline_s``): a silent Mbit/byte or s/ms mixup is
+exactly the class of bug that would corrupt the Fig. 2 reproduction while
+every test still passes on the default config.
+
+Multiplication and division are exempt — they ARE the conversion idiom
+(``mbits / mbps -> s``), as is anything routed through a call (a
+conversion helper returns an unsuffixed value by construction).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional
+
+from repro.lint.core import FileContext, Rule, Violation, register
+
+#: recognized unit suffixes, grouped by dimension (for the message only —
+#: ANY differing pair is flagged; same-dimension mixups like s/ms are the
+#: sneakiest because the magnitudes look plausible)
+UNIT_DIMENSIONS = {
+    "bits": "data", "mbits": "data", "gbits": "data", "kbits": "data",
+    "bytes": "data", "kbytes": "data", "mbytes": "data", "gbytes": "data",
+    "s": "time", "ms": "time", "us": "time", "ns": "time",
+    "mbps": "rate", "gbps": "rate", "kbps": "rate", "bps": "rate",
+    "hz": "frequency", "khz": "frequency", "mhz": "frequency",
+}
+
+_SUFFIX_RE = re.compile(
+    "_(" + "|".join(sorted(UNIT_DIMENSIONS, key=len, reverse=True)) + ")$")
+
+
+def unit_of_name(name: str) -> Optional[str]:
+    """The unit suffix of an identifier, or None (``pon_mbits`` -> mbits)."""
+    m = _SUFFIX_RE.search(name)
+    return m.group(1) if m else None
+
+
+def _unit_of_expr(node: ast.expr) -> Optional[str]:
+    """Unit of a terminal operand; None for anything indirect.
+
+    Only bare names/attributes carry a unit. Calls are conversion helpers
+    (opaque), Mult/Div is the conversion idiom, and a parenthesized
+    same-unit Add/Sub chain keeps its unit so ``a_s + (b_s - c_s)`` works.
+    """
+    if isinstance(node, ast.Name):
+        return unit_of_name(node.id)
+    if isinstance(node, ast.Attribute):
+        return unit_of_name(node.attr)
+    if isinstance(node, ast.UnaryOp):
+        return _unit_of_expr(node.operand)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.Add, ast.Sub)):
+        left, right = _unit_of_expr(node.left), _unit_of_expr(node.right)
+        return left if left == right else None
+    return None
+
+
+@register
+class UnitsHygiene(Rule):
+    code = "REPRO301"
+    name = "units-hygiene"
+    summary = "arithmetic mixes unit-suffixed names without a conversion"
+
+    def _flag(self, ctx: FileContext, node: ast.AST, lu: str, ru: str,
+              out: List[Violation]) -> None:
+        ld, rd = UNIT_DIMENSIONS[lu], UNIT_DIMENSIONS[ru]
+        hint = ("same dimension, different scale — an explicit conversion "
+                "factor is required" if ld == rd else
+                f"dimensions differ ({ld} vs {rd}) — this expression "
+                "cannot be meaningful")
+        out.append(Violation(
+            code=self.code, path=ctx.path, line=node.lineno,
+            col=node.col_offset,
+            message=(f"`_{lu}` and `_{ru}` quantities combined without a "
+                     f"conversion; {hint}")))
+
+    def check(self, ctx: FileContext) -> Iterable[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, (ast.Add, ast.Sub)):
+                lu = _unit_of_expr(node.left)
+                ru = _unit_of_expr(node.right)
+                if lu and ru and lu != ru:
+                    self._flag(ctx, node, lu, ru, out)
+            elif isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+                units = [_unit_of_expr(o) for o in operands]
+                for i in range(len(units) - 1):
+                    lu, ru = units[i], units[i + 1]
+                    if lu and ru and lu != ru:
+                        self._flag(ctx, operands[i + 1], lu, ru, out)
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, (ast.Add, ast.Sub)):
+                lu = _unit_of_expr(node.target)
+                ru = _unit_of_expr(node.value)
+                if lu and ru and lu != ru:
+                    self._flag(ctx, node, lu, ru, out)
+        return out

@@ -7,7 +7,7 @@ SSM (RWKV6) decoders plus the paper's FEMNIST CNN. Every assigned arch in
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,13 +14,11 @@ Attention has two execution modes sharing the same math:
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.sharding import ShardingRules, constrain, pad_to_multiple
+from repro.common.sharding import constrain, pad_to_multiple
 
 
 # ---------------------------------------------------------------------------

@@ -143,7 +143,6 @@ def _combine_manual(yd_flat, dst, wts, EC: int, rules: ShardingRules):
         return None  # caller falls back to the gather path
 
     def body(yd_local, dst_l, w_l):
-        n = jax.lax.psum(1, axis)
         ec_loc = yd_local.shape[1]
         lo = jax.lax.axis_index(axis) * ec_loc
         local = dst_l - lo                                   # (B,S,k)

@@ -20,7 +20,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.sharding import ShardingRules, constrain, pad_to_multiple
 from repro.models.layers import group_rmsnorm

@@ -36,7 +36,7 @@ from __future__ import annotations
 import json
 import random
 import zlib
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 # every metrics artifact this repo emits carries this schema tag so
 # downstream tooling (CI asserts, BENCH_*.json diffs) can key on it

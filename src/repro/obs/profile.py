@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import contextlib
 import time
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 try:
     import jax

@@ -9,11 +9,10 @@ vanilla FedAvg; ``server='adam'`` is FedAdam.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def cosine_lr(base: float, warmup: int, total: int):

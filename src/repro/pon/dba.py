@@ -28,7 +28,7 @@ Grant-ordering invariants for each policy are pinned in
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Type
+from typing import Dict, List, Sequence, Type
 
 # priority classes for upstream jobs (lower = more urgent under fl_priority)
 KIND_PRIORITY: Dict[str, int] = {"theta": 0, "fl": 1, "bg": 2}

@@ -40,15 +40,10 @@ import numpy as np
 
 from repro.obs.context import get as _obs_get
 from repro.pon.dba import make_dba
-from repro.pon.timing import (
-    PonConfig,
-    train_times,
-    WIRELESS_S_MIN,
-    WIRELESS_S_MAX,
-)
+from repro.pon.fast.segments import fifo_pack, segment_max
+from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, PonConfig, train_times
 from repro.pon.topology import Topology
 from repro.pon.traffic import BackgroundTraffic
-from repro.pon.fast.segments import fifo_pack, segment_max
 
 SIM_ENGINES = ("event", "fast", "hybrid")
 

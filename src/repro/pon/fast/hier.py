@@ -24,14 +24,6 @@ import numpy as np
 
 from repro.obs.context import get as _obs_get
 from repro.pon.dba import make_dba
-from repro.pon.timing import (
-    PonConfig,
-    train_times,
-    WIRELESS_S_MIN,
-    WIRELESS_S_MAX,
-)
-from repro.pon.topology import Onu, Topology, Wavelength
-from repro.pon.traffic import BackgroundTraffic
 from repro.pon.fast.engine import (
     _TrafficTopoView,
     fluid_congested,
@@ -40,6 +32,9 @@ from repro.pon.fast.engine import (
     uniform_onu_rate,
 )
 from repro.pon.fast.segments import segment_max
+from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, PonConfig, train_times
+from repro.pon.topology import Onu, Topology, Wavelength
+from repro.pon.traffic import BackgroundTraffic
 
 
 def _pon_topo_factory(cfg: PonConfig):
@@ -210,10 +205,8 @@ def simulate_hier_round_fast(cfg: PonConfig, rng: np.random.Generator,
 
     if mode != "classical" and not cfg.sfl_queueing:
         if cfg.metro_rate_mbps > 0.0:
-            m_start = m_ready.copy()
             m_done = m_ready + cfg.model_mbits / cfg.metro_rate_mbps
         else:
-            m_start = np.full(n_m, np.inf)
             m_done = np.full(n_m, np.inf)
     else:
         m_capacity = cfg.metro_wavelengths * cfg.metro_rate_mbps * T

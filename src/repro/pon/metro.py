@@ -45,12 +45,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.pon.dba import make_dba
-from repro.pon.timing import (
-    PonConfig,
-    train_times,
-    WIRELESS_S_MIN,
-    WIRELESS_S_MAX,
-)
+from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, PonConfig, train_times
 from repro.pon.topology import Topology
 from repro.pon.traffic import BackgroundTraffic
 

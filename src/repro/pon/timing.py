@@ -50,8 +50,8 @@ class PonConfig:
     slice_mbps: float = SLICE_MBPS
     model_mbits: float = MODEL_UPDATE_MBITS
     sync_threshold_s: float = SYNC_THRESHOLD_S
-    downlink_s: float = DOWNLINK_S
-    onu_agg_s: float = ONU_AGG_S
+    downlink_s: float = DOWNLINK_S  # repro: noqa(REPRO501) paper constant T^d
+    onu_agg_s: float = ONU_AGG_S    # repro: noqa(REPRO501) paper constant
     sfl_queueing: bool = False      # True = θ uploads queue through the DBA
     # --- event-simulator knobs (events.py); the defaults reproduce the
     # paper's fixed-slice FIFO model bit for bit ---
@@ -117,6 +117,21 @@ def add_pon_cli_args(ap) -> None:
     ap.add_argument("--clients-per-onu", type=int, default=d.clients_per_onu)
     ap.add_argument("--sfl-queueing", action="store_true",
                     help="θ uploads queue through the DBA (strict)")
+    ap.add_argument("--slice-mbps", type=float, default=d.slice_mbps,
+                    help="reserved FL upstream slice rate (paper: 100)")
+    ap.add_argument("--model-mbits", type=float, default=d.model_mbits,
+                    help="model-update size on the wire in Mbits (paper "
+                         "CNN: 26.416 MBytes = 211.3 Mbit, DESIGN.md §8)")
+    ap.add_argument("--deadline-s", type=float, default=d.sync_threshold_s,
+                    help="round sync deadline; later arrivals straggle "
+                         "(paper: 25 s)")
+    ap.add_argument("--bg-burst-mbits", type=float, default=d.bg_burst_mbits,
+                    help="mean background-traffic burst size")
+    ap.add_argument("--onu-link-mbps", type=float, default=d.onu_link_mbps,
+                    help="per-ONU drop-link cap (default: uncapped)")
+    ap.add_argument("--metro-wavelengths", type=int,
+                    default=d.metro_wavelengths,
+                    help="channels on the OLT→metro segment")
     ap.add_argument("--n-pons", type=int, default=d.n_pons,
                     help="PON trees feeding the metro node (1: single-OLT "
                          "paper setting, no metro tier)")
@@ -139,6 +154,7 @@ def add_pon_cli_args(ap) -> None:
 
 def pon_config_from_args(args) -> PonConfig:
     """Build the PonConfig selected by ``add_pon_cli_args`` flags."""
+    d = PonConfig()
     return PonConfig(n_onus=args.onus, clients_per_onu=args.clients_per_onu,
                      dba=args.dba, n_wavelengths=args.wavelengths,
                      background_load=args.bg_load,
@@ -147,7 +163,19 @@ def pon_config_from_args(args) -> PonConfig:
                      metro_rate_mbps=args.metro_rate_mbps,
                      metro_latency_ms=args.metro_latency_ms,
                      sim_engine=args.sim_engine,
-                     fluid_threshold=args.fluid_threshold)
+                     fluid_threshold=args.fluid_threshold,
+                     # physical-layer axes (getattr: pre-existing parsers
+                     # built before these flags keep working)
+                     slice_mbps=getattr(args, "slice_mbps", d.slice_mbps),
+                     model_mbits=getattr(args, "model_mbits", d.model_mbits),
+                     sync_threshold_s=getattr(args, "deadline_s",
+                                              d.sync_threshold_s),
+                     bg_burst_mbits=getattr(args, "bg_burst_mbits",
+                                            d.bg_burst_mbits),
+                     onu_link_mbps=getattr(args, "onu_link_mbps",
+                                           d.onu_link_mbps),
+                     metro_wavelengths=getattr(args, "metro_wavelengths",
+                                               d.metro_wavelengths))
 
 
 def train_times(sample_counts: np.ndarray) -> np.ndarray:

@@ -17,7 +17,7 @@ design viable at 1000+ nodes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

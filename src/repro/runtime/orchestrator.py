@@ -53,8 +53,7 @@ from repro.pon.timing import WIRELESS_S_MAX, WIRELESS_S_MIN, train_times
 from repro.pon.topology import Topology
 from repro.pon.traffic import BackgroundTraffic
 from repro.runtime.clock import SimClock
-from repro.runtime.policies import (AggregationPolicy, ClientUpdate,
-                                    make_policy, staleness_weights)
+from repro.runtime.policies import AggregationPolicy, ClientUpdate, make_policy, staleness_weights
 
 
 class _BridgedSim:

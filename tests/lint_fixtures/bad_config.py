@@ -1,0 +1,12 @@
+"""Seeded-bad fixture: config reach-through violations (REPRO501/502).
+
+Shadows the ``PonConfig`` class *name* — the project-wide scan keys on
+the names in ``TARGET_CLASSES``, so this isolated copy has a field that
+is neither CLI-reachable nor consumed. Never imported.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PonConfig:
+    dead_knob: int = 0      # REPRO501 (no *_from_args) + REPRO502 (unread)

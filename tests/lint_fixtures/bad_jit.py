@@ -1,0 +1,26 @@
+"""Seeded-bad fixture: jit/Pallas purity violations (REPRO401/402).
+
+Deliberately broken — see bad_rng.py for the policy. Never imported.
+"""
+import jax
+import jax.numpy as jnp
+
+_SCRATCH = []                           # module-level mutable
+
+
+@jax.jit
+def branchy(x, threshold):
+    if threshold > 0:                   # REPRO401: Python branch on tracer
+        x = x * 2
+    _SCRATCH.append(1)                  # REPRO402: mutable capture
+    return jnp.sum(x)
+
+
+def _kernel(x_ref, o_ref):
+    if x_ref:                           # REPRO401: branch on ref param
+        o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    from jax.experimental import pallas as pl
+    return pl.pallas_call(_kernel, out_shape=x)(x)

@@ -1,0 +1,24 @@
+"""Seeded-bad fixture: RNG discipline violations (REPRO201/202/203).
+
+Deliberately broken — consumed by tests/test_lint.py and by the CI
+``lint`` job's liveness check, which requires ``python -m repro.lint``
+to FAIL on this directory (proving the gate is live). Never imported.
+"""
+import jax
+import numpy as np
+
+
+def global_stream_draw(n):
+    np.random.seed(0)                   # REPRO201: hidden global stream
+    return np.random.uniform(size=n)    # REPRO201
+
+
+def unseeded_generator():
+    return np.random.default_rng()      # REPRO202: OS-entropy stream
+
+
+def reused_key(shape):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # REPRO203: identical draws
+    return a, b

@@ -1,0 +1,11 @@
+"""Seeded-bad fixture: units-hygiene violations (REPRO301).
+
+Deliberately broken — see bad_rng.py for the policy. Never imported.
+"""
+
+
+def mixed_arithmetic(payload_mbits, header_bytes, deadline_s, elapsed_ms):
+    total = payload_mbits + header_bytes        # REPRO301: data-scale mix
+    late = elapsed_ms > deadline_s              # REPRO301: time-scale mix
+    drift_s = deadline_s - elapsed_ms           # REPRO301
+    return total, late, drift_s

@@ -1,0 +1,13 @@
+"""Seeded-bad fixture: sim-clock purity violation (REPRO101).
+
+Lives under a ``repro/pon/`` path fragment so the scoped rule applies.
+Deliberately broken — see bad_rng.py for the policy. Never imported.
+"""
+import time
+from datetime import datetime
+
+
+def stamp_grant(job):
+    job.granted_at = time.time()        # REPRO101: wall clock in sim code
+    job.day = datetime.now()            # REPRO101
+    return job

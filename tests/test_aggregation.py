@@ -6,9 +6,8 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis_compat import given, settings, st  # optional dev dep
 
+from hypothesis_compat import given, settings, st  # optional dev dep
 from repro.core import aggregation as agg
 
 

@@ -18,12 +18,21 @@ import pytest
 
 from repro import fl, obs
 from repro.core.fedavg import FLConfig
-from repro.obs.audit import (BandwidthBudgetMonitor, ConvergenceStallMonitor,
-                             DeadlineMissMonitor, HealthEngine, Incident,
-                             RunReport, StragglerOnuMonitor,
-                             TrunkFlatnessMonitor, config_dict, config_hash,
-                             diff_bundles, render_diff_html,
-                             render_timeline_svg)
+from repro.obs.audit import (
+    BandwidthBudgetMonitor,
+    ConvergenceStallMonitor,
+    DeadlineMissMonitor,
+    HealthEngine,
+    Incident,
+    RunReport,
+    StragglerOnuMonitor,
+    TrunkFlatnessMonitor,
+    config_dict,
+    config_hash,
+    diff_bundles,
+    render_diff_html,
+    render_timeline_svg,
+)
 from repro.obs.audit.health import INCIDENT_SCHEMA, default_monitors
 from repro.obs.context import Obs
 from repro.obs.tracer import Span, Tracer

@@ -90,6 +90,10 @@ def test_every_pon_cli_flag_reaches_pon_config_from_args():
         "--onus": "5", "--clients-per-onu": "7", "--n-pons": "2",
         "--metro-rate-mbps": "123", "--metro-latency-ms": "9",
         "--sim-engine": "fast", "--fluid-threshold": "0.5",
+        # physical-layer axes (PR 9, surfaced by lint REPRO501)
+        "--slice-mbps": "250", "--model-mbits": "50",
+        "--deadline-s": "30", "--bg-burst-mbits": "2.5",
+        "--onu-link-mbps": "80", "--metro-wavelengths": "2",
     }
     for flag, value in flips.items():
         cfg = pon_config_from_args(_pon_args([flag, value]))

@@ -11,8 +11,7 @@ import pytest
 from repro import fl, hier, runtime
 from repro.core import aggregation
 from repro.core.fedavg import FLConfig, onu_of_client
-from repro.pon import (MetroTopology, PonConfig, expected_segment_mbits,
-                       round_times)
+from repro.pon import MetroTopology, PonConfig, expected_segment_mbits, round_times
 
 
 def _setup(n_pons, n_onus=4, clients_per_onu=5, seed=1):

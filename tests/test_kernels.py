@@ -3,12 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis_compat import given, settings, st  # optional dev dep
 
-from repro.kernels import ops, ref
+from hypothesis_compat import given, settings, st  # optional dev dep
+from repro.kernels import ref
 from repro.kernels.agg_reduce import agg_reduce
-from repro.kernels.quantize import quantize_int8, dequantize_int8
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantize import dequantize_int8, quantize_int8
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
 

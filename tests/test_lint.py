@@ -1,0 +1,360 @@
+"""repro.lint — rule-by-rule good/bad fixtures, waivers, CLI, and the
+self-clean pin: ``python -m repro.lint src benchmarks`` must exit 0 on
+this repo (every real violation is either fixed or carries a rule-coded
+waiver), while the seeded-bad fixtures under tests/lint_fixtures/ must
+keep FAILING — that pair is what proves the CI gate is live."""
+import json
+import os
+
+import pytest
+
+from repro.lint import all_rules, run_lint
+from repro.lint.__main__ import main as lint_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "lint_fixtures")
+
+
+def lint_file(tmp_path, source, relpath="mod.py", **kw):
+    """Write one source file and lint it through the full pipeline."""
+    path = tmp_path / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    return run_lint([str(path)], **kw)
+
+
+def codes_of(result):
+    return sorted(v.code for v in result.violations)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_ships_all_five_rule_families():
+    codes = set(all_rules())
+    assert {"REPRO101", "REPRO201", "REPRO202", "REPRO203", "REPRO301",
+            "REPRO401", "REPRO402", "REPRO501", "REPRO502"} <= codes
+
+
+# ---------------------------------------------------- REPRO101: sim clock
+
+def test_wall_clock_flagged_in_sim_scope(tmp_path):
+    src = "import time\n\ndef f():\n    return time.time()\n"
+    res = lint_file(tmp_path, src, "repro/pon/mod.py")
+    assert codes_of(res) == ["REPRO101"]
+
+
+def test_wall_clock_alias_is_resolved(tmp_path):
+    src = ("from time import perf_counter as pc\n\n"
+           "def f():\n    return pc()\n")
+    res = lint_file(tmp_path, src, "repro/runtime/mod.py")
+    assert codes_of(res) == ["REPRO101"]
+
+
+def test_wall_clock_fine_outside_sim_scope(tmp_path):
+    src = "import time\n\ndef f():\n    return time.time()\n"
+    res = lint_file(tmp_path, src, "repro/obs/mod.py")
+    assert res.ok
+
+
+# ------------------------------------------------- REPRO201/202: np RNG
+
+def test_np_global_state_flagged(tmp_path):
+    src = ("import numpy as np\n\n"
+           "def f():\n"
+           "    np.random.seed(0)\n"
+           "    return np.random.uniform(size=3)\n")
+    res = lint_file(tmp_path, src, select=["REPRO201"])
+    assert codes_of(res) == ["REPRO201", "REPRO201"]
+
+
+def test_seeded_generator_methods_are_fine(tmp_path):
+    src = ("import numpy as np\n\n"
+           "def f(seed):\n"
+           "    rng = np.random.default_rng(seed)\n"
+           "    return rng.uniform(size=3)\n")
+    assert lint_file(tmp_path, src).ok
+
+
+def test_unseeded_default_rng_flagged(tmp_path):
+    src = ("import numpy as np\n\n"
+           "def f():\n    return np.random.default_rng()\n")
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO202"]
+    ok = ("import numpy as np\n\n"
+          "def f():\n    return np.random.default_rng(seed=7)\n")
+    assert lint_file(tmp_path, ok, "ok.py").ok
+
+
+# ------------------------------------------------ REPRO203: jax key reuse
+
+def test_key_reuse_flagged(tmp_path):
+    src = ("import jax\n\n"
+           "def f(shape):\n"
+           "    key = jax.random.PRNGKey(0)\n"
+           "    a = jax.random.normal(key, shape)\n"
+           "    b = jax.random.uniform(key, shape)\n"
+           "    return a, b\n")
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO203"]
+    assert res.violations[0].line == 6
+
+
+def test_split_and_fold_in_are_derivations_not_reuse(tmp_path):
+    src = ("import jax\n\n"
+           "def f(shape, steps):\n"
+           "    key = jax.random.PRNGKey(0)\n"
+           "    key, sub = jax.random.split(key)\n"
+           "    a = jax.random.normal(sub, shape)\n"
+           "    outs = []\n"
+           "    for t in range(steps):\n"
+           "        outs.append(jax.random.uniform("
+           "jax.random.fold_in(key, t), shape))\n"
+           "    return a, outs\n")
+    assert lint_file(tmp_path, src).ok
+
+
+def test_key_reuse_across_loop_iterations_flagged(tmp_path):
+    # the serve.py decode-loop bug shape: same key sampled every iteration
+    src = ("import jax\n\n"
+           "def f(shape, steps):\n"
+           "    key = jax.random.PRNGKey(0)\n"
+           "    outs = []\n"
+           "    for _ in range(steps):\n"
+           "        outs.append(jax.random.normal(key, shape))\n"
+           "    return outs\n")
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO203"]
+
+
+def test_exclusive_branches_may_share_a_key(tmp_path):
+    src = ("import jax\n\n"
+           "def f(shape, frames):\n"
+           "    key = jax.random.PRNGKey(0)\n"
+           "    if frames:\n"
+           "        return jax.random.normal(key, shape)\n"
+           "    else:\n"
+           "        return jax.random.uniform(key, shape)\n")
+    assert lint_file(tmp_path, src).ok
+
+
+def test_key_named_parameter_is_tracked(tmp_path):
+    src = ("import jax\n\n"
+           "def f(key, shape):\n"
+           "    a = jax.random.normal(key, shape)\n"
+           "    b = jax.random.normal(key, shape)\n"
+           "    return a, b\n")
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO203"]
+
+
+# ----------------------------------------------------- REPRO301: units
+
+def test_cross_unit_addition_flagged(tmp_path):
+    src = "def f(a_mbits, b_bytes):\n    return a_mbits + b_bytes\n"
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO301"]
+
+
+def test_cross_scale_comparison_flagged(tmp_path):
+    src = "def f(t_ms, deadline_s):\n    return t_ms < deadline_s\n"
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO301"]
+
+
+def test_same_unit_and_conversions_are_fine(tmp_path):
+    src = ("def f(a_mbits, b_mbits, rate_mbps, t_s):\n"
+           "    total_mbits = a_mbits + b_mbits\n"
+           "    dt_s = t_s + total_mbits / rate_mbps\n"
+           "    return dt_s\n")
+    assert lint_file(tmp_path, src).ok
+
+
+def test_unsuffixed_names_never_flag(tmp_path):
+    src = "def f(up, lat, a_mbits):\n    return a_mbits + up - lat\n"
+    assert lint_file(tmp_path, src).ok
+
+
+# ------------------------------------------------ REPRO401/402: purity
+
+def test_branch_on_jitted_param_flagged(tmp_path):
+    src = ("import jax\n\n"
+           "@jax.jit\n"
+           "def f(x, flag):\n"
+           "    if flag:\n"
+           "        return x\n"
+           "    return -x\n")
+    res = lint_file(tmp_path, src, select=["REPRO401"])
+    assert codes_of(res) == ["REPRO401"]
+
+
+def test_pallas_kernel_resolved_by_name(tmp_path):
+    src = ("from jax.experimental import pallas as pl\n\n"
+           "def _k(x_ref, o_ref):\n"
+           "    if x_ref:\n"
+           "        o_ref[...] = x_ref[...]\n\n"
+           "def launch(x):\n"
+           "    return pl.pallas_call(_k, out_shape=x)(x)\n")
+    res = lint_file(tmp_path, src, select=["REPRO401"])
+    assert codes_of(res) == ["REPRO401"]
+
+
+def test_branch_on_local_static_is_fine(tmp_path):
+    src = ("import jax\n\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    n = x.shape[0]\n"
+           "    if n > 4:\n"
+           "        return x[:4]\n"
+           "    return x\n")
+    assert lint_file(tmp_path, src, select=["REPRO401"]).ok
+
+
+def test_mutable_capture_and_default_flagged(tmp_path):
+    src = ("import jax\n\n"
+           "CACHE = {}\n\n"
+           "@jax.jit\n"
+           "def f(x, extras=[]):\n"
+           "    return x + len(CACHE) + len(extras)\n")
+    res = lint_file(tmp_path, src, select=["REPRO402"])
+    assert codes_of(res) == ["REPRO402", "REPRO402"]
+
+
+def test_immutable_module_constant_is_fine(tmp_path):
+    src = ("import jax\n\n"
+           "SCALE = 2.0\n\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return x * SCALE\n")
+    assert lint_file(tmp_path, src, select=["REPRO40"]).ok
+
+
+# -------------------------------------------- REPRO501/502: config reach
+
+CONFIG_SRC = """\
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class PonConfig:
+    rate_mbps: float = 100.0
+    dead_knob: int = 3
+
+def pon_config_from_args(args):
+    return PonConfig(rate_mbps=args.rate_mbps)
+
+def use(cfg):
+    return cfg.rate_mbps * 2
+"""
+
+
+def test_config_rules_flag_unreachable_and_dead_fields(tmp_path):
+    res = lint_file(tmp_path, CONFIG_SRC, select=["REPRO5"])
+    assert codes_of(res) == ["REPRO501", "REPRO502"]
+    assert all(v.message.count("dead_knob") for v in res.violations)
+
+
+def test_config_rules_pass_reached_and_consumed_fields(tmp_path):
+    fixed = CONFIG_SRC.replace(
+        "return PonConfig(rate_mbps=args.rate_mbps)",
+        "return PonConfig(rate_mbps=args.rate_mbps, dead_knob=args.dead)"
+    ).replace("return cfg.rate_mbps * 2",
+              "return cfg.rate_mbps * cfg.dead_knob")
+    assert lint_file(tmp_path, fixed, select=["REPRO5"]).ok
+
+
+def test_args_attribute_reads_do_not_count_as_consumption(tmp_path):
+    # args.dead_knob in the builder is plumbing, not consumption
+    src = CONFIG_SRC.replace(
+        "return PonConfig(rate_mbps=args.rate_mbps)",
+        "return PonConfig(rate_mbps=args.rate_mbps, "
+        "dead_knob=args.dead_knob)")
+    res = lint_file(tmp_path, src, select=["REPRO502"])
+    assert codes_of(res) == ["REPRO502"]
+
+
+# --------------------------------------------------------------- waivers
+
+def test_coded_waiver_suppresses_only_that_rule(tmp_path):
+    src = ("import numpy as np\n\n"
+           "def f():\n"
+           "    np.random.seed(0)  # repro: noqa(REPRO201)\n"
+           "    return np.random.default_rng()\n")
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO202"]
+    assert res.n_waived == 1
+
+
+def test_bare_waiver_suppresses_every_rule_on_the_line(tmp_path):
+    src = ("import numpy as np\n\n"
+           "def f():\n"
+           "    np.random.seed(0)  # repro: noqa\n")
+    res = lint_file(tmp_path, src)
+    assert res.ok and res.n_waived == 1
+
+
+def test_wrong_code_waiver_does_not_suppress(tmp_path):
+    src = ("import numpy as np\n\n"
+           "def f():\n"
+           "    np.random.seed(0)  # repro: noqa(REPRO301)\n")
+    res = lint_file(tmp_path, src)
+    assert codes_of(res) == ["REPRO201"]
+
+
+# ------------------------------------------------------- CLI + reporters
+
+def test_cli_fails_on_seeded_bad_fixtures(capsys):
+    assert lint_main([FIXTURES]) == 1
+    out = capsys.readouterr().out
+    for code in ("REPRO101", "REPRO201", "REPRO202", "REPRO203",
+                 "REPRO301", "REPRO401", "REPRO402", "REPRO501",
+                 "REPRO502"):
+        assert code in out, f"{code} missing from fixture findings"
+
+
+def test_cli_json_report_schema(capsys):
+    assert lint_main([FIXTURES, "--format", "json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["lint_schema"] == "repro.lint/v1"
+    assert doc["violations"] and all(
+        set(v) == {"code", "path", "line", "col", "message"}
+        for v in doc["violations"])
+
+
+def test_cli_select_restricts_to_family(capsys):
+    assert lint_main([FIXTURES, "--select", "REPRO3"]) == 1
+    out = capsys.readouterr().out
+    assert "REPRO301" in out and "REPRO201" not in out
+
+
+def test_parse_error_fails_the_run(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    res = run_lint([str(bad)])
+    assert not res.ok and res.parse_errors
+
+
+# ------------------------------------------------------- self-clean pin
+
+def test_repo_is_lint_clean():
+    """src + benchmarks exit 0: every violation fixed or waived in-line."""
+    res = run_lint([os.path.join(REPO, "src"),
+                    os.path.join(REPO, "benchmarks")])
+    assert res.ok, "\n".join(v.format() for v in res.violations)
+    assert res.n_files > 80
+
+
+# --------------------------------- the defect the linter caught (PR 9)
+
+def test_serve_decode_frames_differ_per_step():
+    """Regression pin for the REPRO203 defect in launch/serve.py: the
+    decode loop used to re-sample `jax.random.normal(key, ...)` with the
+    SAME key every step, feeding the model an identical frame at every
+    decode position. decode_frames folds the step index in."""
+    jax = pytest.importorskip("jax")
+    from repro.launch.serve import decode_frames
+    key = jax.random.PRNGKey(0)
+    f0 = decode_frames(key, 0, 2, 8)
+    f1 = decode_frames(key, 1, 2, 8)
+    assert f0.shape == (2, 1, 8)
+    assert not (f0 == f1).all(), "consecutive decode steps saw equal frames"
+    # and deterministic per (key, step): same inputs, same frames
+    assert (decode_frames(key, 1, 2, 8) == f1).all()

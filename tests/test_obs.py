@@ -7,6 +7,7 @@ import math
 import numpy as np
 import pytest
 
+from hypothesis_compat import given, settings, st
 from repro import fl, obs
 from repro.core.fedavg import FLConfig
 from repro.obs.context import Obs
@@ -15,8 +16,6 @@ from repro.obs.tracer import NOOP_TRACER, Tracer
 from repro.pon import PonConfig
 from repro.pon.dba import make_dba
 from repro.pon.events import Topology, UpstreamJob, UpstreamSim
-
-from hypothesis_compat import given, settings, st
 
 
 # ------------------------------------------------------------------ tracer

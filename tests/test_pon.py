@@ -1,8 +1,8 @@
 """PON simulator vs the paper's Fig. 2 claims + timing-model properties."""
 import numpy as np
 import pytest
-from hypothesis_compat import given, settings, st  # optional dev dep
 
+from hypothesis_compat import given, settings, st  # optional dev dep
 from repro.pon import PonConfig, round_times, train_times
 
 

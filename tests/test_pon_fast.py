@@ -27,13 +27,10 @@ import numpy as np
 import pytest
 
 from hypothesis_compat import given, settings, st  # optional dev dep
-
 from repro import fl
 from repro.core.fedavg import FLConfig, onu_of_client
-from repro.pon import (PonConfig, expected_segment_mbits, round_times,
-                       simulate_round)
-from repro.pon.fast import (SIM_ENGINES, FluidUpstreamSim, fluid_congested,
-                            orchestrator_engine)
+from repro.pon import PonConfig, expected_segment_mbits, round_times, simulate_round
+from repro.pon.fast import SIM_ENGINES, FluidUpstreamSim, fluid_congested, orchestrator_engine
 from repro.pon.fast.segments import fifo_pack
 
 ALL_DBAS = ("fifo", "tdma", "ipact", "fl_priority")

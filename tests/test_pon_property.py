@@ -24,7 +24,6 @@ import numpy as np
 import pytest
 
 from hypothesis_compat import given, settings, st
-
 from repro.pon import Topology, UpstreamJob, make_dba, simulate_upstream
 from repro.pon.events import UpstreamSim
 

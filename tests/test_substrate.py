@@ -7,9 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis_compat import given, settings, st  # optional dev dep
 
-from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from hypothesis_compat import given, settings, st  # optional dev dep
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core import compression
 from repro.runtime import FailureModel, MembershipTable, renormalized_weights
 
@@ -66,7 +66,6 @@ def test_quantize_tree_roundtrip_error_bound(seed):
     q, s = compression.quantize_tree(tree, jax.random.PRNGKey(seed))
     deq = compression.dequantize_tree(q, s)
     for k in tree:
-        scale = float(jax.tree.leaves(s)[0]) if k == "a" else None
         err = np.abs(np.asarray(deq[k]) - np.asarray(tree[k]))
         bound = float(np.max(np.abs(np.asarray(tree[k])))) / 127.0 * 1.01
         assert err.max() <= bound
