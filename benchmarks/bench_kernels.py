@@ -39,7 +39,7 @@ def main():
 
     # independent streams for data, weights, and quantizer noise — one
     # key is consumed at most once (REPRO203)
-    kx, kw, kq, kd = jax.random.split(jax.random.PRNGKey(0), 4)
+    kx, kw, kq, kd, kq4, kf = jax.random.split(jax.random.PRNGKey(0), 6)
     # the paper's ONU AF over one ONU's clients (20 x 6.6M-param CNN)
     C, N = 20, 6_603_710
     x = jax.random.normal(kx, (C, N), jnp.float32)
@@ -57,6 +57,17 @@ def main():
                  lambda a, s: ops.dequantize_int8(a, s), qq, ss)
     rows.append({"name": "dequantize_int8_6.6M", "us_per_call": d_us,
                  "derived": ""})
+    q4_us = _time("quantize_int4", lambda a: ops.quantize_int4(a, kq4), x[0])
+    rows.append({"name": "quantize_int4_6.6M", "us_per_call": q4_us,
+                 "derived": "wire_reduction=8x"})
+    k = max(1, N // 100)
+    t_us = _time("topk_sparsify", lambda a: ops.topk_sparsify(a, k), x[0])
+    rows.append({"name": "topk_sparsify_1pct_6.6M", "us_per_call": t_us,
+                 "derived": f"k={k}"})
+    f_us = _time("agg_reduce_quant",
+                 lambda a, b, c: ops.agg_reduce_quant(a, b, c, kf), x, w, m)
+    rows.append({"name": "agg_reduce_quant_onu20x6.6M", "us_per_call": f_us,
+                 "derived": "fused_agg+int8"})
     return report.emit_rows(
         rows, "kernels",
         [("name", ""), ("us_per_call", ".0f"), ("derived", "")],

@@ -42,6 +42,7 @@ ALIGN_KEYS: Dict[str, Tuple[str, ...]] = {
     "time_to_accuracy": ("policy", "mode"),
     "kernels": ("name",),
     "scale": ("engine", "mode", "n_clients"),
+    "pareto": ("mode", "compress"),
 }
 
 _SKIP_FIELDS = {"bench", "bench_schema", "obs_schema"}

@@ -12,7 +12,9 @@
               fast vs event engine parity + trunk flatness (DESIGN.md §15)
   time_to_accuracy — simulated-seconds-to-target, sync vs semi_sync vs
               fedbuff through the repro.runtime Orchestrator (beyond-paper)
-  kernels   — ONU-AF / quantize micro-bench
+  pareto    — bandwidth–accuracy Pareto: {none,int8,int4,topk} wire
+              compression × {sfl,hier_sfl,classical} (DESIGN.md §17)
+  kernels   — ONU-AF / quantize / top-k micro-bench
   report    — EXPERIMENTS tables from results/dryrun/*.json (if present)
 
 ``--json OUT.json`` additionally writes every bench's rows as
@@ -31,7 +33,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="upstream|involved|accuracy|dba|hierarchy|scale|"
-                         "time_to_accuracy|kernels|report")
+                         "time_to_accuracy|pareto|kernels|report")
     ap.add_argument("--full", action="store_true",
                     help="accuracy bench with the full LEAF CNN (slow)")
     ap.add_argument("--rounds", type=int, default=None,
@@ -52,16 +54,21 @@ def main() -> None:
                        metrics_out=args.metrics_out, driver="bench_sweep")
 
     from benchmarks import (bench_accuracy, bench_dba, bench_hierarchy,
-                            bench_involved, bench_kernels, bench_scale,
-                            bench_time_to_accuracy, bench_upstream, report)
+                            bench_involved, bench_kernels, bench_pareto,
+                            bench_scale, bench_time_to_accuracy,
+                            bench_upstream, report)
 
     acc_argv = []
     tta_argv = []
     hier_argv = []
+    # small selection keeps the 12-cell sweep CI-sized; seeded, so the
+    # rows stay deterministic for regress.py's accounting gate
+    pareto_argv = ["--n-selected", "16"]
     if args.rounds is not None:
         acc_argv += ["--rounds", str(args.rounds)]
         tta_argv += ["--rounds", str(args.rounds)]
         hier_argv += ["--rounds", str(args.rounds)]
+        pareto_argv += ["--rounds", str(args.rounds)]
     if args.full:
         acc_argv += ["--full"]
     # fast-engine only: the sweep reaches 1e5 clients, and the same argv
@@ -77,6 +84,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "accuracy": lambda: bench_accuracy.main(acc_argv),
         "time_to_accuracy": lambda: bench_time_to_accuracy.main(tta_argv),
+        "pareto": lambda: bench_pareto.main(pareto_argv),
     }
     names = [args.only] if args.only else list(benches)
     collected = {}

@@ -1,36 +1,126 @@
 """Gradient/update compression for the constrained uplink (beyond-paper).
 
 The paper keeps upstream traffic constant via topology (one θ per ONU);
-compression is orthogonal and multiplies the saving: int8 stochastic
-rounding (unbiased) with optional error feedback shrinks every uploaded
-model/θ by 4x vs f32 (2x vs bf16). Composes with SFL: quantize only the
-already-reduced pod shard before the cross-pod hop (see
-``aggregation.two_step_allreduce(compress='int8')``) or the client→ONU leg
-(this module, used by the FedAvg engine and benchmarks).
+compression is orthogonal and multiplies the saving: int8/int4 stochastic
+rounding (unbiased) and top-k sparsification shrink every uploaded model/
+θ/Φ/Ψ by 4–50x vs f32, with optional error feedback keeping the
+accumulated bias bounded (Bandwidth Slicing, arXiv 1911.07615, shows FL
+accuracy is gated by how much uplink each round actually gets — this is
+the knob that buys uplink back). Composes with SFL at every tier of the
+θ→Φ→Ψ transport (``repro.fl.strategy``): the ONU quantizes θ before the
+PON upstream, the OLT quantizes Φ before the metro segment, and the metro
+node quantizes Ψ before the trunk.
 
-The Pallas kernel pair (kernels/quantize.py) implements the same math with
-VMEM tiling for the TPU hot path; this module is the jnp form.
+Three layers live here:
+
+  * wire-format accounting — :func:`compressed_bytes` is the single
+    wire-size oracle; every transport's ``model_mbits`` is scaled by
+    :meth:`CompressionSpec.wire_scale` so History rows, metrics records,
+    and the ``expected_segment_mbits`` budget oracle all bill the same
+    compressed payload (DESIGN.md §17);
+  * the jnp math — per-leaf (:func:`quantize_tree`) and per-row
+    (:func:`roundtrip_rows`) quantize/top-k forms, bit-identical to the
+    Pallas kernel pair (kernels/quantize.py, kernels/agg_reduce.py) that
+    implements the same math with VMEM tiling for the TPU hot path;
+  * :class:`CompressionState` — the backend-owned seam carrying the EF
+    residuals (per tier for θ/Φ/Ψ, per client for the classical
+    transport) and the deterministic stochastic-rounding key stream.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
+from typing import Any, Dict
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+SCHEMES = ("none", "int8", "int4", "topk")
+
+# top-k wire format: each kept element ships a f32 value + an int32 index
+_VALUE_BYTES = 4
+_INDEX_BYTES = 4
+# per-leaf header for the quantized formats: one f32 scale
+_SCALE_BYTES = 4
+
+
+def _qmax(bits: int) -> float:
+    """Symmetric integer range: 127 for int8, 7 for int4."""
+    if bits not in (4, 8):
+        raise ValueError(f"unsupported quantization width: {bits} bits")
+    return float(2 ** (bits - 1) - 1)
+
+
+def scheme_bits(scheme: str) -> int:
+    """Quantized-payload width per element (quantizing schemes only)."""
+    return {"int8": 8, "int4": 4}[scheme]
+
+
+# ---------------------------------------------------------------------------
+# wire-format accounting — the single wire-size oracle
+# ---------------------------------------------------------------------------
+
+def raw_bytes(tree) -> int:
+    """Uncompressed f32 wire size (the ``--compress none`` baseline)."""
+    return 4 * sum(int(math.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def compressed_bytes(tree, scheme: str = "int8", *,
+                     topk_frac: float = 0.01) -> int:
+    """Wire size of ``tree`` under ``scheme`` — the accounting oracle.
+
+    Per-leaf wire formats (generalized over ``(bits, leaves)``; the old
+    form hardcoded int8's 1 byte/element):
+
+      * ``none``  — 4 bytes/element (f32 payload, no header)
+      * ``int8``  — 1 byte/element + one f32 scale per leaf
+      * ``int4``  — 2 elements/byte (odd counts round up) + one f32 scale
+        per leaf
+      * ``topk``  — per leaf ``k = ceil(topk_frac · n)`` kept elements,
+        each billing a f32 value + an int32 index (no scale header)
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown compression scheme {scheme!r}; "
+                         f"expected one of {SCHEMES}")
+    leaves = jax.tree.leaves(tree)
+    total = 0
+    for x in leaves:
+        n = int(math.prod(x.shape))
+        if scheme == "none":
+            total += 4 * n
+        elif scheme == "int8":
+            total += n + _SCALE_BYTES
+        elif scheme == "int4":
+            total += (n + 1) // 2 + _SCALE_BYTES
+        else:                                   # topk
+            k = min(n, math.ceil(topk_frac * n)) if n else 0
+            total += k * (_VALUE_BYTES + _INDEX_BYTES)
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf jnp forms (legacy API, kept bit-compatible for bits=8)
+# ---------------------------------------------------------------------------
 
 def quantize_tree(tree, key, bits: int = 8):
-    """Unbiased per-leaf stochastic-rounding quantization.
+    """Unbiased per-leaf stochastic-rounding quantization (int8 or int4).
 
-    Returns (qtree int8, scales f32 tree)."""
-    assert bits == 8, "int8 only"
+    Returns (qtree int8 — int4 values live in [-7, 7] unpacked — and a
+    f32 scale tree). Empty pytrees short-circuit: ``jax.random.split(key,
+    0)`` raises, and there is nothing to quantize anyway."""
+    qmax = _qmax(bits)
     leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return jax.tree.unflatten(treedef, []), jax.tree.unflatten(treedef, [])
     keys = jax.random.split(key, len(leaves))
     qs, scales = [], []
     for x, k in zip(leaves, keys):
         xf = x.astype(jnp.float32)
-        s = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        s = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / qmax
         y = xf / s
         noise = jax.random.uniform(k, y.shape, jnp.float32) - 0.5
-        qs.append(jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8))
+        qs.append(jnp.clip(jnp.round(y + noise), -qmax, qmax).astype(jnp.int8))
         scales.append(s)
     return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
 
@@ -39,21 +129,248 @@ def dequantize_tree(qtree, scales):
     return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qtree, scales)
 
 
-def compress_with_error_feedback(tree, err, key):
+def init_residual(tree, dtype=jnp.float32):
+    """Zero EF residual matching ``tree``'s structure/shapes.
+
+    The residual's dtype/device is a caller decision (the backend seam,
+    DESIGN.md §17) — f32 by default because the residual accumulates
+    sub-quantization-step corrections that bf16 would swallow."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def compress_with_error_feedback(tree, err, key, bits: int = 8):
     """EF-SGD style: quantize (tree + err); the residual becomes new err.
 
-    err=None initializes. Returns (qtree, scales, new_err)."""
+    ``err=None`` initializes via :func:`init_residual` (legacy
+    convenience — drivers should own the residual through
+    :class:`CompressionState` so its dtype/device/lifetime is explicit).
+    Returns (qtree, scales, new_err). Empty pytrees short-circuit."""
+    if not jax.tree.leaves(tree):
+        empty = jax.tree.map(lambda x: x, tree)
+        return empty, empty, (err if err is not None else empty)
     if err is None:
-        err = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+        err = init_residual(tree)
     corrected = jax.tree.map(lambda x, e: x.astype(jnp.float32) + e, tree, err)
-    q, s = quantize_tree(corrected, key)
+    q, s = quantize_tree(corrected, key, bits)
     deq = dequantize_tree(q, s)
     new_err = jax.tree.map(lambda c, d: c - d, corrected, deq)
     return q, s, new_err
 
 
-def compressed_bytes(tree) -> int:
-    """Wire size of the int8 form (payload + one f32 scale per leaf)."""
-    import numpy as np
-    leaves = jax.tree.leaves(tree)
-    return int(sum(np.prod(x.shape) for x in leaves) + 4 * len(leaves))
+# ---------------------------------------------------------------------------
+# per-row jnp forms — stacked trees with a leading entity axis (one row per
+# ONU θ / PON Φ / client δ); bit-identical math to the Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _row_absmax(x) -> jnp.ndarray:
+    """(R, ...) -> (R,) max|x| over the trailing axes."""
+    xf = x.astype(jnp.float32)
+    return jnp.max(jnp.abs(xf.reshape(x.shape[0], -1)), axis=1) \
+        if x.ndim > 1 else jnp.abs(xf)
+
+
+def quantize_rows(x, key, bits: int = 8):
+    """Per-row stochastic-rounding quantization of a stacked leaf.
+
+    x: (R, ...) -> (q int8 same shape, scales (R,) f32). Each row gets
+    its own scale — one ONU's θ must not inherit another's dynamic range.
+    """
+    qmax = _qmax(bits)
+    xf = x.astype(jnp.float32)
+    scales = jnp.maximum(_row_absmax(x), 1e-12) / qmax
+    s = scales.reshape((-1,) + (1,) * (x.ndim - 1))
+    noise = jax.random.uniform(key, x.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(xf / s + noise), -qmax, qmax).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_rows(q, scales):
+    s = scales.reshape((-1,) + (1,) * (q.ndim - 1))
+    return q.astype(jnp.float32) * s
+
+
+def topk_rows(x, frac: float):
+    """Per-row magnitude top-k sparsification of a stacked leaf (dense
+    output: kept values in place, the rest zero).
+
+    Keeps ``k = ceil(frac · n)`` elements per row via the k-th-largest
+    |value| threshold (ties at the threshold are all kept — the wire
+    accounting bills exactly k, the math keeps ≥ k; documented in
+    DESIGN.md §17). Matches the Pallas threshold-mask kernel bit for bit.
+    """
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(x.shape[0], -1)
+    n = flat.shape[1]
+    k = max(1, min(n, math.ceil(frac * n)))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][:, -1]
+    keep = jnp.abs(flat) >= thresh[:, None]
+    return jnp.where(keep, flat, 0.0).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# the composable spec + backend-owned state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """What crosses the wire: scheme + knobs (hashable, strategy-carried)."""
+
+    scheme: str = "none"            # none | int8 | int4 | topk
+    topk_frac: float = 0.01
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown compression scheme {self.scheme!r}; "
+                             f"expected one of {SCHEMES}")
+        if self.scheme == "topk" and not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError(
+                f"topk_frac must be in (0, 1], got {self.topk_frac}")
+
+    @property
+    def active(self) -> bool:
+        return self.scheme != "none"
+
+    def wire_scale(self, tree=None) -> float:
+        """Compressed ÷ raw-f32 *bulk-payload* size — what scales the
+        ``model_mbits`` billed by every transport tier.
+
+        Quantized schemes bill exactly ``bits/32`` (int8 → 1/4, int4 →
+        1/8): the per-leaf f32 scale headers ride the control plane with
+        the DBA REPORT/GRANT messages, which the event simulator likewise
+        never bills as payload (byte-exact sizes *including* headers come
+        from :func:`compressed_bytes`, the accounting oracle for actual
+        trees). top-k's kept value+index pairs ARE the bulk payload, so
+        its ratio is exact from the tree when one is given (per-leaf
+        ``ceil(frac·n)``), nominal ``2·frac`` otherwise."""
+        if not self.active:
+            return 1.0
+        if self.scheme == "topk":
+            if tree is not None and jax.tree.leaves(tree):
+                return (compressed_bytes(tree, "topk",
+                                         topk_frac=self.topk_frac)
+                        / raw_bytes(tree))
+            return self.topk_frac * (_VALUE_BYTES + _INDEX_BYTES) / 4.0
+        return scheme_bits(self.scheme) / 32.0
+
+    def roundtrip_rows_leaf(self, x, key, err=None, row_mask=None):
+        """One stacked leaf through compress→decompress (+EF).
+
+        Rows where ``row_mask`` is 0 transmit nothing: the output row is
+        zero and the residual row is carried unchanged. Returns
+        ``(x_hat, new_err)`` (``new_err`` is None when EF is off)."""
+        xf = x.astype(jnp.float32)
+        corrected = xf + err if err is not None else xf
+        if self.scheme == "topk":
+            sent = topk_rows(corrected, self.topk_frac)
+        else:
+            q, s = quantize_rows(corrected, key, scheme_bits(self.scheme))
+            sent = dequantize_rows(q, s)
+        if row_mask is not None:
+            m = row_mask.astype(jnp.float32).reshape(
+                (-1,) + (1,) * (x.ndim - 1))
+            sent = sent * m
+        new_err = None
+        if err is not None:
+            new_err = corrected - sent
+            if row_mask is not None:
+                # silent rows keep their residual untouched
+                new_err = jnp.where(m > 0, new_err, err)
+        return sent, new_err
+
+
+class CompressionState:
+    """Backend-owned compression context: EF residuals + the key stream.
+
+    One instance lives for the whole run (created by the backend when its
+    strategy's spec is active, DESIGN.md §17). It owns
+
+      * the deterministic stochastic-rounding key stream — a base
+        ``PRNGKey(seed)`` folded with a monotone call counter, so
+        trajectories are reproducible without touching the driver's
+        numpy RNG (``--compress none`` stays bit-for-bit);
+      * per-tier EF residuals ("theta"/"phi"/"psi": one stacked tree with
+        a stable row identity — global ONU id, PON index, the singleton
+        server row) initialized lazily from the first seen template with
+        explicit f32 dtype;
+      * per-client EF residuals (classical transport: row identity
+        changes every round, so rows are keyed by global client id).
+    """
+
+    def __init__(self, spec: CompressionSpec, seed: int = 0):
+        self.spec = spec
+        self._base = jax.random.PRNGKey(seed)
+        self._calls = 0
+        self._tier_err: Dict[str, Any] = {}
+        self._client_err: Dict[int, Any] = {}
+
+    @property
+    def active(self) -> bool:
+        return self.spec.active
+
+    def next_key(self):
+        self._calls += 1
+        return jax.random.fold_in(self._base, self._calls)
+
+    def roundtrip(self, tier: str, tree, row_mask=None):
+        """A stacked tier tree (leading axis = stable row identity)
+        through compress→decompress, updating the tier's EF residual."""
+        if not self.active:
+            return tree
+        err = self._tier_err.get(tier)
+        if err is None and self.spec.error_feedback:
+            err = init_residual(tree)
+        leaves, treedef = jax.tree.flatten(tree)
+        if not leaves:
+            return tree
+        err_leaves = (jax.tree.leaves(err) if err is not None
+                      else [None] * len(leaves))
+        key = self.next_key() if self.spec.scheme != "topk" else self._base
+        keys = (jax.random.split(key, len(leaves))
+                if self.spec.scheme != "topk" else [None] * len(leaves))
+        outs, errs = [], []
+        for x, e, k in zip(leaves, err_leaves, keys):
+            sent, new_e = self.spec.roundtrip_rows_leaf(x, k, err=e,
+                                                        row_mask=row_mask)
+            outs.append(sent)
+            errs.append(new_e)
+        if self.spec.error_feedback:
+            self._tier_err[tier] = jax.tree.unflatten(treedef, errs)
+        return jax.tree.unflatten(treedef, outs)
+
+    def roundtrip_clients(self, client_ids, tree, row_mask=None):
+        """Classical transport: per-client rows keyed by global client id
+        (residuals gathered before / scattered after, involved rows only).
+        """
+        if not self.active:
+            return tree
+        if not jax.tree.leaves(tree) or len(client_ids) == 0:
+            return tree
+        err = None
+        if self.spec.error_feedback:
+            zero = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], jnp.float32),
+                                tree)
+            rows = [self._client_err.get(int(c), zero) for c in client_ids]
+            # stack each client's residual tree along a new leading axis
+            err = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        leaves, treedef = jax.tree.flatten(tree)
+        err_leaves = (jax.tree.leaves(err) if err is not None
+                      else [None] * len(leaves))
+        key = self.next_key() if self.spec.scheme != "topk" else self._base
+        keys = (jax.random.split(key, len(leaves))
+                if self.spec.scheme != "topk" else [None] * len(leaves))
+        outs, errs = [], []
+        for x, e, k in zip(leaves, err_leaves, keys):
+            sent, new_e = self.spec.roundtrip_rows_leaf(x, k, err=e,
+                                                        row_mask=row_mask)
+            outs.append(sent)
+            errs.append(new_e)
+        if self.spec.error_feedback:
+            new_err = jax.tree.unflatten(treedef, errs)
+            m = (np.asarray(row_mask) > 0 if row_mask is not None
+                 else np.ones(len(client_ids), bool))
+            for i, cid in enumerate(client_ids):
+                if m[i]:
+                    self._client_err[int(cid)] = jax.tree.map(
+                        lambda x: x[i], new_err)
+        return jax.tree.unflatten(treedef, outs)

@@ -41,11 +41,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fedavg
+from repro.core.compression import CompressionState
 from repro.core.fedavg import FLConfig
 from repro.data import femnist
 from repro.fl.strategy import Strategy
 from repro.obs import profile
 from repro.obs.context import get as _obs_get
+
+
+def backend_wire_scale(backend) -> float:
+    """Compressed ÷ raw wire size for what this backend puts on the wire.
+
+    The single hook the transport accounting (loop/Orchestrator) uses to
+    scale ``model_mbits``: exact when the backend holds the params pytree
+    (per-leaf headers and int4 odd-element rounding included), the
+    scheme's nominal ratio otherwise (TransportBackend sweeps).
+    """
+    spec = backend.strategy.compression_spec()
+    if not spec.active:
+        return 1.0
+    return spec.wire_scale(getattr(backend, "params", None))
 
 
 class ClientStackedBackend:
@@ -71,6 +86,11 @@ class ClientStackedBackend:
         self.minibatch_fn = minibatch_fn
         self._last_eval: Dict[str, float] = {}
         self._one_client = None     # lazily-jitted single-client update
+        # wire compression (DESIGN.md §17): the backend owns the stateful
+        # side — EF residuals + the rounding key stream — so the frozen
+        # Strategy stays pure and ``compress=none`` allocates nothing
+        spec = strategy.compression_spec()
+        self._comp = CompressionState(spec) if spec.active else None
 
     def _eval(self) -> Dict[str, float]:
         obs = _obs_get()
@@ -86,13 +106,15 @@ class ClientStackedBackend:
         """No update this round — carry the last eval forward."""
         return dict(self._last_eval) if self._last_eval else {"acc": 0.0}
 
-    def _apply_and_eval(self, rnd: int, stacked, weights, mask, onu_ids
-                        ) -> Dict[str, float]:
+    def _apply_and_eval(self, rnd: int, stacked, weights, mask, onu_ids,
+                        client_ids=None) -> Dict[str, float]:
         """Shared tail of both regimes: strategy aggregate → server update
         → uplink stats + eval cadence (any change here changes the sync
         run_round and the async apply_updates together)."""
         agg, stats = self.strategy.aggregate(stacked, weights, mask, onu_ids,
-                                             self.fl.total_onus)
+                                             self.fl.total_onus,
+                                             comp=self._comp,
+                                             client_ids=client_ids)
         self.params, self.server_state = self.strategy.server_update(
             self.params, agg, self.server_state)
         out = {"uplink_models": float(stats["uplink_models"])}
@@ -128,7 +150,7 @@ class ClientStackedBackend:
         return self._apply_and_eval(
             rnd, deltas, jnp.asarray(w),
             jnp.concatenate([jnp.ones(len(active)), jnp.zeros(pad)]),
-            jnp.asarray(self.onu_ids[padded]))
+            jnp.asarray(self.onu_ids[padded]), client_ids=padded)
 
     def replay_round(self, rnd: int, selected: np.ndarray, mask: np.ndarray,
                      rt: Dict[str, Any], rng: np.random.Generator) -> None:
@@ -182,7 +204,7 @@ class ClientStackedBackend:
         return self._apply_and_eval(
             rnd, stacked, jnp.asarray(np.asarray(weights, np.float32)),
             jnp.ones(len(deltas), jnp.float32),
-            jnp.asarray(self.onu_ids[clients]))
+            jnp.asarray(self.onu_ids[clients]), client_ids=clients)
 
 
 class GradientBackend:

@@ -110,6 +110,18 @@ def add_experiment_cli_args(ap, strategy_default: str = "sfl_two_step") -> None:
                         "turn the adaptive server step on)")
     g.add_argument("--server-lr", type=float, default=None,
                    help="fedopt server learning rate (default: strategy's)")
+    g.add_argument("--compress", default="none",
+                   choices=["none", "int8", "int4", "topk"],
+                   help="wire compression for every transport tier "
+                        "(θ/Φ/Ψ or client uploads): stochastic-rounding "
+                        "int8/int4 or magnitude top-k (DESIGN.md §17)")
+    g.add_argument("--topk-frac", type=float, default=0.01,
+                   help="top-k: fraction of elements kept per leaf "
+                        "(wire bills value+index per kept element)")
+    g.add_argument("--error-feedback", action="store_true",
+                   help="carry the compression residual into the next "
+                        "round (EF-SGD; per-tier for sfl/hier, per-client "
+                        "for classical)")
     r = ap.add_argument_group("event-driven runtime (repro.runtime)")
     r.add_argument("--policy", default="sync",
                    help="aggregation policy for the Orchestrator driver: "
@@ -133,7 +145,10 @@ def strategy_kwargs_from_args(args) -> dict:
     the ONE place a new strategy's CLI knob gets added."""
     return {"mu": args.fedprox_mu, "server_opt": args.server_opt,
             "server_lr": args.server_lr,
-            "n_pons": getattr(args, "n_pons", 1)}
+            "n_pons": getattr(args, "n_pons", 1),
+            "compress": getattr(args, "compress", "none"),
+            "topk_frac": getattr(args, "topk_frac", 0.01),
+            "error_feedback": getattr(args, "error_feedback", False)}
 
 
 def comparison_modes(strategy: str) -> list:
@@ -166,6 +181,15 @@ def filter_strategy_kwargs(name: str, kwargs) -> dict:
             out["n_pons"] = kwargs["n_pons"]
         if kwargs.get("mu") is not None:
             out["mu"] = kwargs["mu"]
+    # the compression axis lives on the base Strategy — every strategy
+    # consumes it (a compressed baseline IS the intended comparison, unlike
+    # the learning knobs above); defaults pass through as no-ops
+    if kwargs.get("compress", "none") != "none":
+        out["compress"] = kwargs["compress"]
+        if kwargs.get("topk_frac") is not None:
+            out["topk_frac"] = kwargs["topk_frac"]
+        if kwargs.get("error_feedback"):
+            out["error_feedback"] = True
     return out
 
 

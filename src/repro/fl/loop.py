@@ -25,11 +25,13 @@ straggler-drop renormalization handles the rest (DESIGN.md §7).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import selection
+from repro.fl.backends import backend_wire_scale
 from repro.fl.config import ExperimentConfig
 from repro.obs.context import Obs
 from repro.obs.context import get as _obs_get
@@ -97,9 +99,21 @@ def _transport_stage(cfg: ExperimentConfig, backend, failures,
                                                                 fl.n_clients)
     live = (crash_alive[sel] if crash_alive is not None
             else np.ones(len(sel), bool))
-    rt = round_times(fl.pon_config(), rng, sel[live], backend.onu_ids,
+    pon = fl.pon_config()
+    spec = backend.strategy.compression_spec()
+    if spec.active:
+        # the compressed payload is what actually rides the wire: scale the
+        # model size handed to the event simulator so grants/queueing/
+        # deadline physics AND the Mbits accounting all see the same bytes
+        # (wire_mbits is the single per-model wire size, DESIGN.md §17)
+        pon = dataclasses.replace(
+            pon, model_mbits=pon.model_mbits * backend_wire_scale(backend))
+    rt = round_times(pon, rng, sel[live], backend.onu_ids,
                      backend.sample_counts, backend.strategy.transport,
                      obs=obs)
+    if spec.active:
+        rt["wire_mbits"] = pon.model_mbits
+        rt["compress"] = spec.scheme
     if not live.all():
         rt = _expand_rt(rt, live)
     mask = np.asarray(rt["involved"], np.float32)
@@ -161,6 +175,13 @@ def sync_round(cfg: ExperimentConfig, backend, failures,
             g = reg.gauge(gname)
             g.set(float(rt[key]))
             rec[key] = g.value
+    if "wire_mbits" in rt:
+        # compressed per-model wire size (absent ⇒ uncompressed run; the
+        # budget oracle and health monitors key off this, DESIGN.md §17)
+        g = reg.gauge("fl.wire_mbits")
+        g.set(float(rt["wire_mbits"]))
+        rec["wire_mbits"] = g.value
+        rec["compress"] = rt["compress"]
     rec.update(metrics)
     if obs.health is not None:
         # online health monitors (repro.obs.audit); incidents surface in

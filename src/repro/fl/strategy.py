@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation, fedavg
+from repro.core.compression import CompressionSpec
 from repro.optim import make_optimizer
 
 
@@ -53,12 +54,30 @@ Stats = Dict[str, Any]
 
 @dataclasses.dataclass(frozen=True)
 class Strategy:
-    """Base strategy: FedAvg local SGD + server apply at ``server_lr``."""
+    """Base strategy: FedAvg local SGD + server apply at ``server_lr``.
+
+    Every strategy also carries the wire-compression axis (``compress`` /
+    ``topk_frac`` / ``error_feedback`` — DESIGN.md §17): what crosses each
+    transport tier is compressed inside ``aggregate`` when the backend
+    hands in an active :class:`~repro.core.compression.CompressionState`
+    (``comp``), which owns the EF residuals and the rounding key stream.
+    ``compress="none"`` (the default) leaves every code path — including
+    RNG streams — bit-for-bit untouched.
+    """
 
     name: ClassVar[str] = "base"
     transport: ClassVar[str] = "sfl"   # what crosses the PON upstream
 
     server_lr: float = 1.0
+    # wire compression (composes with every strategy; see compression_spec)
+    compress: str = "none"             # none | int8 | int4 | topk
+    topk_frac: float = 0.01
+    error_feedback: bool = False
+
+    def compression_spec(self) -> CompressionSpec:
+        return CompressionSpec(scheme=self.compress,
+                               topk_frac=self.topk_frac,
+                               error_feedback=self.error_feedback)
 
     # --- hooks ------------------------------------------------------------
     def init_state(self, params) -> Any:
@@ -69,8 +88,8 @@ class Strategy:
         """One client's local training → (delta pytree, mean loss)."""
         return fedavg.default_local_update(global_params, batches, loss_fn, fl)
 
-    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int
-                  ) -> Tuple[Any, Stats]:
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int,
+                  *, comp=None, client_ids=None) -> Tuple[Any, Stats]:
         raise NotImplementedError
 
     def server_update(self, params, agg, state) -> Tuple[Any, Any]:
@@ -88,10 +107,18 @@ class SflTwoStep(Strategy):
     name: ClassVar[str] = "sfl_two_step"
     transport: ClassVar[str] = "sfl"
 
-    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int):
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int,
+                  *, comp=None, client_ids=None):
         agg, thetas, K = aggregation.segment_aggregate(
             deltas, weights, mask, onu_ids, n_onus)
         onu_active = jnp.zeros((n_onus,), jnp.float32).at[onu_ids].add(mask)
+        if comp is not None and comp.active:
+            # each ONU compresses its θ before the PON upstream; the CPS
+            # reduces the dequantized θ̂ (silent ONUs transmit nothing)
+            thetas = comp.roundtrip("theta", thetas,
+                                    row_mask=(onu_active > 0))
+            agg = jax.tree.map(
+                lambda th: jnp.sum(th, axis=0) / jnp.maximum(K, 1e-9), thetas)
         stats = {"K": K, "uplink_models": jnp.sum(onu_active > 0),
                  "involved": jnp.sum(mask)}
         return agg, stats
@@ -104,7 +131,15 @@ class Classical(Strategy):
     name: ClassVar[str] = "classical"
     transport: ClassVar[str] = "classical"
 
-    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int):
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int,
+                  *, comp=None, client_ids=None):
+        if comp is not None and comp.active:
+            # every involved client compresses its own δ for the uplink;
+            # EF residuals are keyed by global client id (stable across
+            # rounds even though the stacked row order is not)
+            ids = (list(client_ids) if client_ids is not None
+                   else list(range(mask.shape[0])))
+            deltas = comp.roundtrip_clients(ids, deltas, row_mask=mask)
         agg, K = aggregation.classical_aggregate(deltas, weights, mask)
         stats = {"K": K, "uplink_models": jnp.sum(mask),
                  "involved": jnp.sum(mask)}
@@ -212,10 +247,12 @@ class HierSfl(SflTwoStep):
             params, agg)
         return new_params, state
 
-    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int):
+    def aggregate(self, deltas, weights, mask, onu_ids, n_onus: int,
+                  *, comp=None, client_ids=None):
         if self.n_pons <= 1:
             # degenerate forest: EXACTLY the two-step float schedule
-            return super().aggregate(deltas, weights, mask, onu_ids, n_onus)
+            return super().aggregate(deltas, weights, mask, onu_ids, n_onus,
+                                     comp=comp, client_ids=client_ids)
         if n_onus % self.n_pons:
             raise ValueError(
                 f"hier_sfl: total ONU count {n_onus} is not divisible by "
@@ -224,19 +261,35 @@ class HierSfl(SflTwoStep):
         w = (weights * mask).astype(jnp.float32)
         K = jnp.sum(w)
         pon_of_onu = jnp.arange(n_onus) // per_pon
-
-        def per_leaf(x):
-            xf = x.astype(jnp.float32)
-            wx = xf * w.reshape((-1,) + (1,) * (xf.ndim - 1))
-            theta = jax.ops.segment_sum(wx, onu_ids, num_segments=n_onus)
-            phi = jax.ops.segment_sum(theta, pon_of_onu,
-                                      num_segments=self.n_pons)
-            return jnp.sum(phi, axis=0) / jnp.maximum(K, 1e-9)
-
-        agg = jax.tree.map(per_leaf, deltas)
         onu_active = jnp.zeros((n_onus,), jnp.float32).at[onu_ids].add(mask)
         pon_active = jax.ops.segment_sum(onu_active, pon_of_onu,
                                          num_segments=self.n_pons)
+        compressing = comp is not None and comp.active
+
+        def theta_leaf(x):
+            xf = x.astype(jnp.float32)
+            wx = xf * w.reshape((-1,) + (1,) * (xf.ndim - 1))
+            return jax.ops.segment_sum(wx, onu_ids, num_segments=n_onus)
+
+        thetas = jax.tree.map(theta_leaf, deltas)
+        if compressing:
+            # tier 1: each ONU compresses θ before the PON upstream
+            thetas = comp.roundtrip("theta", thetas,
+                                    row_mask=(onu_active > 0))
+        phis = jax.tree.map(
+            lambda th: jax.ops.segment_sum(th, pon_of_onu,
+                                           num_segments=self.n_pons), thetas)
+        if compressing:
+            # tier 2: each OLT compresses Φ before the metro segment
+            phis = comp.roundtrip("phi", phis, row_mask=(pon_active > 0))
+        psi = jax.tree.map(lambda ph: jnp.sum(ph, axis=0), phis)
+        if compressing:
+            # tier 3: the metro node compresses Ψ before the trunk
+            # (singleton row axis so the per-row forms apply)
+            psi = jax.tree.map(
+                lambda x: x[0], comp.roundtrip(
+                    "psi", jax.tree.map(lambda x: x[None], psi)))
+        agg = jax.tree.map(lambda p: p / jnp.maximum(K, 1e-9), psi)
         stats = {"K": K, "uplink_models": jnp.sum(onu_active > 0),
                  "metro_models": jnp.sum(pon_active > 0),
                  "involved": jnp.sum(mask)}

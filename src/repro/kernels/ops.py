@@ -16,9 +16,12 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.agg_reduce import agg_reduce as _agg_pallas
+from repro.kernels.agg_reduce import agg_reduce_quant as _agg_quant_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.quantize import dequantize_int8 as _dequant_pallas
+from repro.kernels.quantize import quantize_int4 as _quant4_pallas
 from repro.kernels.quantize import quantize_int8 as _quant_pallas
+from repro.kernels.quantize import topk_sparsify as _topk_pallas
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_pallas
 from repro.obs.profile import named_scope
@@ -67,6 +70,40 @@ def dequantize_int8(q, scale, use_pallas: Optional[bool] = None):
         if m == "ref":
             return ref.dequantize_int8_ref(q, scale)
         return _dequant_pallas(q, scale, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def quantize_int4(x, key, use_pallas: Optional[bool] = None):
+    with named_scope("kernels.quantize_int4"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.quantize_int4_ref(x, key)
+        return _quant4_pallas(x, key, interpret=(m == "interpret"))
+
+
+# int4 shares the int8 dequant math (int8-typed values × f32 scale);
+# only the wire format differs, which compressed_bytes accounts for
+dequantize_int4 = dequantize_int8
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def topk_sparsify(x, k: int, use_pallas: Optional[bool] = None):
+    with named_scope("kernels.topk_sparsify"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.topk_sparsify_ref(x, k)
+        return _topk_pallas(x, k, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def agg_reduce_quant(x, weights, mask, key, bits: int = 8,
+                     use_pallas: Optional[bool] = None):
+    with named_scope("kernels.agg_reduce_quant"):
+        m = _mode(use_pallas)
+        if m == "ref":
+            return ref.agg_reduce_quant_ref(x, weights, mask, key, bits)
+        return _agg_quant_pallas(x, weights, mask, key, bits=bits,
+                                 interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))

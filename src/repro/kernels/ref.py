@@ -18,16 +18,47 @@ def agg_reduce_ref(x, weights, mask):
     return jnp.einsum("c,cn->n", w, x.astype(jnp.float32))
 
 
-def quantize_int8_ref(x, key):
+def quantize_intb_ref(x, key, bits: int = 8):
+    qmax = float(2 ** (bits - 1) - 1)
+    if x.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int8), jnp.float32(1.0)
     xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / qmax
     noise = jax.random.uniform(key, x.shape, jnp.float32)
-    q = jnp.clip(jnp.round(xf / scale + (noise - 0.5)), -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(xf / scale + (noise - 0.5)), -qmax, qmax).astype(jnp.int8)
     return q, scale
+
+
+def quantize_int8_ref(x, key):
+    return quantize_intb_ref(x, key, 8)
+
+
+def quantize_int4_ref(x, key):
+    return quantize_intb_ref(x, key, 4)
 
 
 def dequantize_int8_ref(q, scale):
     return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify_ref(x, k: int):
+    """(N,) -> dense (N,) keeping the k largest-|x| entries (ties at the
+    threshold all kept, matching the kernel's threshold-mask form)."""
+    if x.shape[0] == 0:
+        return jnp.zeros((0,), jnp.float32)
+    xf = x.astype(jnp.float32)
+    k = max(1, min(int(k), x.shape[0]))
+    thresh = jax.lax.top_k(jnp.abs(xf), k)[0][-1]
+    return jnp.where(jnp.abs(xf) >= thresh, xf, 0.0)
+
+
+def agg_reduce_quant_ref(x, weights, mask, key, bits: int = 8):
+    """Unfused oracle: reduce with the einsum form, then quantize. The
+    fused kernel matches within one quantization step (summation order of
+    the aggregate differs, so bit-exactness is not the contract here)."""
+    if x.shape[0] == 0 or x.shape[1] == 0:
+        return jnp.zeros((x.shape[1],), jnp.int8), jnp.float32(1.0)
+    return quantize_intb_ref(agg_reduce_ref(x, weights, mask), key, bits)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):

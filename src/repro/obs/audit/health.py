@@ -156,16 +156,22 @@ class BandwidthBudgetMonitor(Monitor):
             n_active_onus=min(n_sel, pon.total_onus),
             n_active_pons=pon.n_pons)
         self._mode = mode
+        self._model_mbits = pon.model_mbits
 
     def on_round(self, rec):
         if self._budget is None:
             return []
+        # compressed runs stamp the effective per-model wire size into the
+        # record; the oracle is linear in model_mbits, so the budget scales
+        # exactly (DESIGN.md §17)
+        wire = rec.get("wire_mbits")
+        scale = float(wire) / self._model_mbits if wire else 1.0
         out = []
         for key, seg in self._SEGMENTS.items():
             actual = rec.get(key)
             if actual is None:
                 continue
-            budget = self._budget[seg]
+            budget = self._budget[seg] * scale
             if float(actual) > budget * (1.0 + self.tol_rel):
                 out.append(Incident(
                     kind="bandwidth_budget", severity="error",
@@ -195,15 +201,17 @@ class TrunkFlatnessMonitor(Monitor):
         trunk = rec.get("trunk_mbits")
         if self._model_mbits is None or trunk is None:
             return []
-        if float(trunk) > self._model_mbits * (1.0 + self.tol_rel):
+        # one (possibly compressed) model per round is still the bound
+        model = float(rec.get("wire_mbits") or self._model_mbits)
+        if float(trunk) > model * (1.0 + self.tol_rel):
             return [Incident(
                 kind="trunk_flatness", severity="error",
                 round=rec.get("round"), t_s=rec.get("t_s"),
                 message=(f"trunk carried {float(trunk):.1f} Mbit > one "
-                         f"model ({self._model_mbits:.1f}) — hier "
+                         f"model ({model:.1f}) — hier "
                          "aggregation is not collapsing Φs into one Ψ"),
                 data={"trunk_mbits": float(trunk),
-                      "model_mbits": self._model_mbits})]
+                      "model_mbits": model})]
         return []
 
 

@@ -42,6 +42,7 @@ from typing import Any, Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.fl.backends import backend_wire_scale
 from repro.fl.config import ExperimentConfig
 from repro.fl.loop import Callback, History
 from repro.obs.context import Obs, get as _obs_get
@@ -114,6 +115,18 @@ class Orchestrator:
         self.history = History()
         self.clock = SimClock()
         self.pon_cfg = cfg.fl.pon_config()
+        # wire compression scales every job's size_mbits at the source: all
+        # four job-creation sites (classical dispatch, θ, Φ, metro relay)
+        # read self.pon_cfg.model_mbits, so replacing it once here keeps the
+        # event physics and the Mbits accounting on the same compressed
+        # payload (DESIGN.md §17); the sync policy goes through
+        # fl.loop.sync_round, which applies the identical scaling itself
+        self._wire_spec = backend.strategy.compression_spec()
+        if self._wire_spec.active:
+            self.pon_cfg = dataclasses.replace(
+                self.pon_cfg,
+                model_mbits=(self.pon_cfg.model_mbits
+                             * backend_wire_scale(backend)))
         self.window_s = (cfg.round_window_s if cfg.round_window_s is not None
                          else self.pon_cfg.sync_threshold_s)
         self.server_version = 0
@@ -436,6 +449,11 @@ class Orchestrator:
                "staleness_max": float(stale.max()) if len(stale) else 0.0}
         if self._metro is not None:
             rec["metro_mbits"] = self.take_metro_mbits()
+        if self._wire_spec.active:
+            g = self.obs.metrics.gauge("fl.wire_mbits")
+            g.set(self.pon_cfg.model_mbits)
+            rec["wire_mbits"] = g.value
+            rec["compress"] = self._wire_spec.scheme
         rec.update(metrics)
         rec.update(extra or {})
         if self.obs.health is not None:

@@ -1,0 +1,256 @@
+"""Compressed θ→Φ→Ψ transport: CompressionState semantics, strategy
+composition, wire accounting through RoundLoop/Orchestrator/health
+monitors, and the --compress none bit-for-bit pin (DESIGN.md §17)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import fl, runtime
+from repro.core import aggregation
+from repro.core.compression import CompressionSpec, CompressionState
+from repro.core.fedavg import FLConfig, onu_of_client
+from repro.pon import PonConfig
+
+
+# ------------------------------------------------------- CompressionState
+
+def _rows_tree(rng, rows=4):
+    return {"w": jnp.asarray(rng.normal(size=(rows, 6, 2)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(rows, 3)).astype(np.float32))}
+
+
+def test_state_key_stream_deterministic():
+    """Same spec + seed ⇒ identical roundtrip outputs; the stream never
+    touches the driver's numpy RNG."""
+    tree = _rows_tree(np.random.default_rng(0))
+    outs = []
+    for _ in range(2):
+        st = CompressionState(CompressionSpec("int8"), seed=3)
+        outs.append(st.roundtrip("theta", tree))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # successive calls advance the fold_in counter: different noise
+    st = CompressionState(CompressionSpec("int8"), seed=3)
+    first = st.roundtrip("theta", tree)
+    second = st.roundtrip("theta", tree)
+    assert any(np.any(np.asarray(x) != np.asarray(y))
+               for x, y in zip(jax.tree.leaves(first),
+                               jax.tree.leaves(second)))
+
+
+def test_masked_rows_transmit_nothing_and_keep_residual():
+    """A silent row (mask 0) contributes zeros AND carries its EF residual
+    unchanged into the next round."""
+    rng = np.random.default_rng(1)
+    tree = _rows_tree(rng)
+    st = CompressionState(CompressionSpec("int8", error_feedback=True))
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    out = st.roundtrip("theta", tree, row_mask=mask)
+    for leaf in jax.tree.leaves(out):
+        np.testing.assert_array_equal(np.asarray(leaf)[2], 0.0)
+    err = st._tier_err["theta"]
+    for leaf in jax.tree.leaves(err):
+        # silent row: residual still the lazy-init zero
+        np.testing.assert_array_equal(np.asarray(leaf)[2], 0.0)
+        # transmitting rows accumulated a (generically nonzero) residual
+        assert np.any(np.asarray(leaf)[0] != 0.0)
+
+
+def test_per_client_residuals_keyed_by_global_id():
+    """Classical EF: residual rows follow the client id, not the row
+    position in this round's selection."""
+    rng = np.random.default_rng(2)
+    st = CompressionState(CompressionSpec("int8", error_feedback=True))
+    tree = _rows_tree(rng, rows=2)
+    st.roundtrip_clients([5, 9], tree)
+    err9 = jax.tree.map(lambda x: np.asarray(x).copy(),
+                        st._client_err[9])
+    # same client in a different slot: the gathered residual must be 9's
+    tree2 = _rows_tree(rng, rows=2)
+    st.roundtrip_clients([9, 5], tree2,
+                         row_mask=jnp.asarray([0.0, 1.0]))
+    # client 9 was masked ⇒ its residual is untouched
+    for a, b in zip(jax.tree.leaves(err9),
+                    jax.tree.leaves(st._client_err[9])):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+@pytest.mark.parametrize("scheme", ["int8", "int4", "topk"])
+def test_compressed_aggregate_stays_near_oracle(scheme):
+    """Every transport's compressed aggregate stays close to the exact
+    weighted mean (unbiased quantization / top-magnitude selection)."""
+    rng = np.random.default_rng(3)
+    C, n_onus = 12, 4
+    tree = {"w": jnp.asarray(rng.normal(size=(C, 8)).astype(np.float32))}
+    weights = jnp.asarray(rng.uniform(1, 50, C).astype(np.float32))
+    mask = jnp.ones(C, jnp.float32)
+    onu = jnp.asarray(rng.integers(0, n_onus, C))
+    want, _ = aggregation.numpy_weighted_mean(
+        np.asarray(tree["w"]), np.asarray(weights), np.asarray(mask))
+    for name in ("sfl_two_step", "classical", "hier_sfl"):
+        kw = {"n_pons": 2} if name == "hier_sfl" else {}
+        strat = fl.make_strategy(name, compress=scheme, topk_frac=0.5, **kw)
+        comp = CompressionState(strat.compression_spec())
+        agg, _ = strat.aggregate(tree, weights, mask, onu, n_onus,
+                                 comp=comp, client_ids=np.arange(C))
+        scale_ref = np.abs(want).max() + 1e-9
+        err = np.abs(np.asarray(agg["w"]) - want).max() / scale_ref
+        # int4 has 15 levels; topk at frac=.5 drops half the mass
+        assert err < (0.9 if scheme == "topk" else 0.4), (name, scheme, err)
+
+
+def test_compression_spec_carried_by_every_strategy():
+    for name in fl.strategy_names():
+        strat = fl.make_strategy(name, compress="int4", error_feedback=True)
+        spec = strat.compression_spec()
+        assert spec.scheme == "int4" and spec.error_feedback
+        assert fl.make_strategy(name).compression_spec().active is False
+
+
+def test_filter_strategy_kwargs_compression_passthrough():
+    """Compression knobs reach every strategy, but only when non-default —
+    a stock run's kwargs tuple stays empty (bit-for-bit History rows)."""
+    base = {"mu": None, "server_opt": None, "server_lr": None,
+            "n_pons": 1, "compress": "none", "topk_frac": 0.01,
+            "error_feedback": False}
+    for name in ("sfl_two_step", "classical", "fedprox", "fedopt"):
+        assert fl.filter_strategy_kwargs(name, base) == {}
+        got = fl.filter_strategy_kwargs(
+            name, {**base, "compress": "topk", "topk_frac": 0.1,
+                   "error_feedback": True})
+        assert got["compress"] == "topk" and got["topk_frac"] == 0.1
+        assert got["error_feedback"] is True
+
+
+# ------------------------------------------------- wire accounting (loop)
+
+def _loop(strategy, n_rounds=3, seed=0):
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=10, pon=pon)
+    counts = np.random.default_rng(0).integers(
+        50, 400, flc.n_clients).astype(np.float32)
+    exp = fl.ExperimentConfig(fl=flc, strategy="sfl_two_step",
+                              n_rounds=n_rounds, seed=seed)
+    backend = fl.TransportBackend(strategy, counts, onu_of_client(flc))
+    return fl.RoundLoop(exp, backend), pon
+
+
+def test_compress_none_bit_for_bit_vs_default():
+    """An explicit --compress none run is byte-identical to a run that
+    never heard of compression — rows, keys, and values."""
+    want = _loop(fl.make_strategy("sfl"))[0].run().records
+    got = _loop(fl.make_strategy("sfl", compress="none"))[0].run().records
+    assert got == want
+    assert all("wire_mbits" not in r and "compress" not in r for r in got)
+
+
+def test_wire_mbits_flows_rows_metrics_and_sim():
+    """int8 rows stamp wire_mbits = model/4 into History AND the metrics
+    gauge, and the billed upstream is an exact multiple of the compressed
+    wire size (the sim was handed the scaled payload)."""
+    loop, pon = _loop(fl.make_strategy("sfl", compress="int8"))
+    hist = loop.run()
+    wire = pon.model_mbits / 4
+    for r in hist:
+        assert r["compress"] == "int8"
+        assert r["wire_mbits"] == pytest.approx(wire)
+        n_thetas = r["upstream_mbits"] / wire
+        assert n_thetas == pytest.approx(round(n_thetas))
+        assert 0 < n_thetas <= 4
+    assert loop.metrics.gauge("fl.wire_mbits").value == pytest.approx(wire)
+    # the selection stream is untouched: same rounds, same n_selected
+    plain = _loop(fl.make_strategy("sfl"))[0].run()
+    assert [r["n_selected"] for r in plain] == \
+        [r["n_selected"] for r in hist]
+
+
+def test_orchestrator_stamps_wire_mbits():
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=8, pon=pon)
+    counts = np.random.default_rng(0).integers(
+        50, 400, flc.n_clients).astype(np.float32)
+    onu = onu_of_client(flc)
+    exp = fl.ExperimentConfig(fl=flc, strategy="sfl_two_step",
+                              n_rounds=3, seed=3)
+    backend = fl.TransportBackend(fl.make_strategy("sfl", compress="int4"),
+                                  counts, onu)
+    hist = runtime.Orchestrator(exp, backend).run()
+    assert hist.records
+    for r in hist.records:
+        assert r["compress"] == "int4"
+        assert r["wire_mbits"] == pytest.approx(pon.model_mbits / 8)
+
+
+def test_bandwidth_budget_monitor_scales_with_wire():
+    """The budget oracle is linear in model_mbits: a compressed round is
+    judged against the wire-scaled budget, not the f32 one."""
+    from repro.obs.audit.health import BandwidthBudgetMonitor
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=10, pon=pon)
+    exp = fl.ExperimentConfig(fl=flc, strategy="sfl_two_step")
+    m = BandwidthBudgetMonitor(tol_rel=0.01)
+    m.bind(exp)
+    wire = pon.model_mbits / 4
+    budget_full = 4 * pon.model_mbits          # 4 ONUs × f32 model
+    # compressed round at the scaled budget: healthy
+    assert m.on_round({"round": 0, "wire_mbits": wire,
+                       "upstream_mbits": budget_full / 4}) == []
+    # compressed round billing the FULL f32 budget: 4x over ⇒ incident
+    incs = m.on_round({"round": 1, "wire_mbits": wire,
+                       "upstream_mbits": budget_full})
+    assert len(incs) == 1 and incs[0].kind == "bandwidth_budget"
+
+
+# ------------------------------------------------- end-to-end (learning)
+
+def test_pareto_none_cell_matches_bench_accuracy():
+    """bench_pareto's --compress none cell IS bench_accuracy's run:
+    identical final accuracy at the same seed/topology — the Pareto
+    harness adds measurement, not perturbation."""
+    from benchmarks import bench_accuracy, bench_pareto
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    want = bench_accuracy.run(n_rounds=2, n_selected=10, seed=0,
+                              modes=("sfl",), pon=pon)
+    rows = bench_pareto.run(n_rounds=2, n_selected=10, seed=0,
+                            modes=("sfl",), schemes=("none",), pon=pon)
+    assert rows[0]["acc"] == want["sfl"]["accs"][-1]
+    assert rows[0]["consistent"] is True
+    assert rows[0]["reduction_x"] == 1.0
+
+
+def test_client_stacked_backend_owns_ef_state():
+    """The EF residual lives on the backend seam (satellite 3): created
+    with the backend when the spec is active, absent otherwise, and
+    populated after a compressed round."""
+    from repro import configs
+    from repro.data import femnist
+    from repro.models import femnist_cnn
+
+    cfg = configs.get("femnist_cnn").reduced()
+    pon = PonConfig(n_onus=4, clients_per_onu=5)
+    flc = FLConfig(n_onus=4, clients_per_onu=5, n_selected=6,
+                   local_steps=2, pon=pon)
+    clients, eval_set = femnist.generate(
+        femnist.FemnistConfig(n_clients=flc.n_clients, seed=7))
+    eval_batch = jax.tree.map(jnp.asarray, eval_set)
+    counts = femnist.sample_counts(clients)
+
+    def mk(strategy):
+        params, _ = femnist_cnn.init_params(cfg, jax.random.PRNGKey(0))
+        return fl.ClientStackedBackend(
+            flc, strategy, params, clients, eval_batch,
+            lambda p, b: femnist_cnn.loss_fn(p, b), sample_counts=counts)
+
+    assert mk(fl.make_strategy("sfl"))._comp is None
+    backend = mk(fl.make_strategy("sfl", compress="int8",
+                                  error_feedback=True))
+    assert backend._comp is not None and backend._comp.spec.error_feedback
+    exp = fl.ExperimentConfig(fl=flc, strategy="sfl_two_step",
+                              strategy_kwargs=(("compress", "int8"),
+                                               ("error_feedback", True)),
+                              n_rounds=1, seed=0)
+    fl.RoundLoop(exp, backend).run()
+    assert "theta" in backend._comp._tier_err

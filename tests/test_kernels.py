@@ -6,9 +6,10 @@ import pytest
 
 from hypothesis_compat import given, settings, st  # optional dev dep
 from repro.kernels import ref
-from repro.kernels.agg_reduce import agg_reduce
+from repro.kernels.agg_reduce import agg_reduce, agg_reduce_quant
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.quantize import dequantize_int8, quantize_int8
+from repro.kernels.quantize import (dequantize_int8, pack_int4, quantize_int4,
+                                    quantize_int8, topk_sparsify, unpack_int4)
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
 
@@ -118,6 +119,86 @@ def test_quantize_unbiased(seed):
         errs.append(np.asarray(dequantize_int8(q, s, interpret=True) - x))
     mean_err = np.mean(errs)
     assert abs(mean_err) < 2e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.integers(1, 12000), scale_exp=st.integers(-6, 6),
+       seed=st.integers(0, 2**30))
+def test_quantize_int4_random_vs_ref(N, scale_exp, seed):
+    """int4 path: bit-identical to the jnp reference, values in [-7, 7],
+    and the nibble pack/unpack wire roundtrip is lossless."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (N,), jnp.float32) * (10.0 ** scale_exp)
+    q, s = quantize_int4(x, key, interpret=True)
+    qr, sr = ref.quantize_int4_ref(x, key)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    assert float(s) == float(sr)
+    assert int(np.abs(np.asarray(q)).max()) <= 7
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(pack_int4(q), N)), np.asarray(q))
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, s, interpret=True))
+                        - np.asarray(x)))
+    assert err <= float(s) * 1.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.integers(1, 5000), frac=st.floats(0.001, 1.0),
+       seed=st.integers(0, 2**30))
+def test_topk_sparsify_random_vs_ref(N, frac, seed):
+    """top-k threshold mask: bit-identical to the jnp reference; keeps
+    at least k entries (ties at the threshold all kept), zeroes the rest."""
+    import math
+    x = jax.random.normal(jax.random.PRNGKey(seed), (N,), jnp.float32)
+    k = max(1, min(N, math.ceil(frac * N)))
+    got = topk_sparsify(x, k, interpret=True)
+    want = ref.topk_sparsify_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    nz = int(np.count_nonzero(np.asarray(got)))
+    assert nz >= min(k, int(np.count_nonzero(np.asarray(x))))
+    kept = np.abs(np.asarray(got))[np.asarray(got) != 0]
+    dropped = np.abs(np.asarray(x))[np.asarray(got) == 0]
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max()
+
+
+@settings(max_examples=10, deadline=None)
+@given(C=st.integers(1, 24), N=st.integers(1, 4000),
+       bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**30))
+def test_agg_reduce_quant_fused_vs_unfused_ref(C, N, bits, seed):
+    """The fused aggregate+quantize kernel matches the unfused oracle
+    (einsum reduce, then quantize) within one quantization level — the
+    per-block summation order can move a value across a rounding
+    boundary, so bit-exactness is deliberately not the contract."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (C, N), jnp.float32)
+    w = jax.random.uniform(ks[1], (C,)) * 10
+    m = (jax.random.uniform(ks[2], (C,)) > 0.3).astype(jnp.float32)
+    q, s = agg_reduce_quant(x, w, m, key, bits=bits, interpret=True)
+    qr, sr = ref.agg_reduce_quant_ref(x, w, m, key, bits)
+    assert np.isclose(float(s), float(sr), rtol=1e-5)
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert diff.max() <= 1
+
+
+def test_quantize_topk_zero_length_guards():
+    """N=0 / C=0 are reachable (an ONU whose every client crashed
+    mid-round) — every entry point returns empty instead of erroring."""
+    e = jnp.zeros((0,), jnp.float32)
+    for fn in (quantize_int8, quantize_int4):
+        q, s = fn(e, KEY, interpret=True)
+        assert q.shape == (0,) and float(s) == 1.0
+    assert dequantize_int8(jnp.zeros((0,), jnp.int8), jnp.float32(1.0),
+                           interpret=True).shape == (0,)
+    assert topk_sparsify(e, 5, interpret=True).shape == (0,)
+    assert pack_int4(jnp.zeros((0,), jnp.int8)).shape == (0,)
+    assert unpack_int4(jnp.zeros((0,), jnp.uint8), 0).shape == (0,)
+    assert agg_reduce(jnp.zeros((0, 7)), jnp.zeros((0,)), jnp.zeros((0,)),
+                      interpret=True).shape == (7,)
+    for shape in ((0, 7), (3, 0)):
+        q, s = agg_reduce_quant(jnp.zeros(shape), jnp.zeros((shape[0],)),
+                                jnp.zeros((shape[0],)), KEY, interpret=True)
+        assert q.shape == (shape[1],) and float(s) == 1.0
 
 
 # ------------------------------------------------------------ flash attention

@@ -89,8 +89,49 @@ def test_error_feedback_reduces_bias():
 
 
 def test_compressed_bytes():
+    """The (bits, leaves)-generalized wire oracle, pinned per scheme."""
     tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((3, 3))}
+    # int8 (the default): 1 byte/element + one f32 scale per leaf
     assert compression.compressed_bytes(tree) == 109 + 8
+    assert compression.compressed_bytes(tree, "int8") == 109 + 8
+    # none: 4 bytes/element, no header — the raw_bytes baseline
+    assert compression.compressed_bytes(tree, "none") == 4 * 109
+    assert compression.raw_bytes(tree) == 4 * 109
+    # int4: 2 elements/byte, odd leaf counts round up, + scale per leaf
+    assert compression.compressed_bytes(tree, "int4") == 50 + 5 + 8
+    # topk: ceil(frac·n) per leaf, 8 bytes (f32 value + int32 index) each
+    assert compression.compressed_bytes(tree, "topk", topk_frac=0.01) \
+        == (1 + 1) * 8
+    assert compression.compressed_bytes(tree, "topk", topk_frac=0.5) \
+        == (50 + 5) * 8
+    with pytest.raises(ValueError, match="unknown compression scheme"):
+        compression.compressed_bytes(tree, "zstd")
+
+
+def test_compressed_bytes_empty_tree():
+    assert compression.compressed_bytes({}, "int8") == 0
+    assert compression.compressed_bytes({}, "topk") == 0
+    q, s = compression.quantize_tree({}, jax.random.PRNGKey(0))
+    assert q == {} and s == {}
+
+
+def test_wire_scale_pins():
+    """wire_scale is the model_mbits multiplier billed at every tier:
+    exactly bits/32 for the quantized schemes (scale headers ride the
+    control plane, DESIGN.md §17), exact-from-tree for topk."""
+    from repro.core.compression import CompressionSpec
+    assert CompressionSpec("none").wire_scale() == 1.0
+    assert CompressionSpec("int8").wire_scale() == 0.25
+    assert CompressionSpec("int4").wire_scale() == 0.125
+    tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((3, 3))}
+    spec = CompressionSpec("topk", topk_frac=0.01)
+    assert spec.wire_scale(tree) == 16 / 436
+    # nominal (no tree): frac · 8 bytes per kept element ÷ 4 bytes raw
+    assert spec.wire_scale() == 0.01 * 2.0
+    with pytest.raises(ValueError, match="topk_frac"):
+        CompressionSpec("topk", topk_frac=0.0)
+    with pytest.raises(ValueError, match="unknown compression scheme"):
+        CompressionSpec("gzip")
 
 
 # -------------------------------------------------------------------- runtime
